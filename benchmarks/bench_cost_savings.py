@@ -1,0 +1,30 @@
+"""Fig. 3 — fraction of inference cost saved vs relative cost γ, for
+parallelization ρ ∈ {0, 0.5, 1} at a fixed selection rate."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, time_op
+from repro.core.cost_model import fraction_cost_saved
+
+
+def run(verbose=True):
+    sel = 0.6
+    k = 3
+    gammas = [1 / 2, 1 / 5, 1 / 10, 1 / 50, 1 / 100, 1 / 1000]
+    rows = {}
+    for rho in (0.0, 0.5, 1.0):
+        rows[rho] = [fraction_cost_saved(g, k, rho, sel) for g in gammas]
+        if verbose:
+            print(f"# rho={rho}: " + " ".join(f"{s:+.3f}" for s in rows[rho]))
+
+    # paper claims: at gamma<=1/50 sequential ≈ parallel; at gamma>=1/5
+    # sequential can go NEGATIVE (needs parallelism)
+    gap_50 = rows[1.0][3] - rows[0.0][3]
+    seq_5 = rows[0.0][1]
+    us = time_op(lambda: fraction_cost_saved(0.02, 3, 0.5, 0.6) or 0.0, repeats=50)
+    return csv_row(
+        "fig3_cost_savings",
+        us,
+        f"seq_vs_par_gap_at_gamma_1_50={gap_50:.3f};seq_savings_at_gamma_1_5={seq_5:+.3f}",
+    )

@@ -1,0 +1,52 @@
+"""Fig. 4a — edge-to-cloud inference: on-device tier handles agreed samples
+locally; only disagreements pay the network delay.  Reports the mean
+response-latency reduction vs always-cloud across the paper's delay grid."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PoolModel, csv_row, sample_pool_logits, skill_for_accuracy, time_op,
+)
+from repro.core import calibration, deferral
+from repro.core.cost_model import EDGE_DELAYS, EdgeCloudCost
+
+
+def run(verbose=True):
+    # edge tier: 3 tiny models (acc .72 each); cloud: big model (acc .90)
+    edge = [PoolModel(f"edge{j}", skill_for_accuracy(0.72), 1.0, seed=j) for j in range(3)]
+    cloud = [PoolModel("cloud", skill_for_accuracy(0.90), 100.0, seed=9)]
+    y, _, logits = sample_pool_logits(edge + cloud, 8000, seed=5, difficulty_beta=(1, 3))
+    yc, _, logits_c = sample_pool_logits(edge + cloud, 400, seed=55, difficulty_beta=(1, 3))
+
+    L = jax.numpy.asarray(np.stack([logits[m.name] for m in edge]))
+    Lc = jax.numpy.asarray(np.stack([logits_c[m.name] for m in edge]))
+    out_c = deferral.vote_rule(Lc, 0.0)
+    theta, _ = calibration.estimate_threshold(
+        np.asarray(out_c.score), np.asarray(out_c.pred) == yc, epsilon=0.03,
+        n_samples=100,
+    )
+    out = deferral.vote_rule(L, theta)
+    defer = np.asarray(out.defer)
+    pred = np.where(defer, logits["cloud"].argmax(-1), np.asarray(out.pred))
+    acc_abc = float((pred == y).mean())
+    acc_cloud = float((logits["cloud"].argmax(-1) == y).mean())
+
+    reductions = {}
+    for name, delay in EDGE_DELAYS.items():
+        cm = EdgeCloudCost(delay=delay)
+        abc_lat = cm.mean_latency(defer.mean())
+        cloud_lat = cm.mean_latency(1.0)  # every request crosses the network
+        reductions[name] = cloud_lat / abc_lat
+        if verbose:
+            print(f"# delay={name}({delay}s): ABC {abc_lat*1e3:.3f}ms vs cloud "
+                  f"{cloud_lat*1e3:.3f}ms -> {reductions[name]:.1f}x")
+
+    us = time_op(jax.jit(lambda l: deferral.vote_rule(l, 0.67).defer), L)
+    worst = reductions["large"]
+    return csv_row(
+        "fig4a_edge_cloud",
+        us,
+        f"comm_cost_reduction_large_delay={worst:.1f}x;acc_abc={acc_abc:.3f};acc_cloud={acc_cloud:.3f}",
+    )

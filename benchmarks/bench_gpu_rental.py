@@ -1,0 +1,73 @@
+"""Fig. 4b + Tables 4/5 — heterogeneous-GPU model serving: tiers placed on
+V100/A6000/A100/H100 (Lambda prices); ABC's rental cost vs best single
+model on the top GPU, with the per-tier exit-fraction breakdown."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PoolModel, csv_row, sample_pool_logits, skill_for_accuracy, time_op,
+)
+from repro.core import calibration, deferral
+from repro.core.cascade import TierSpec, cascade_apply_routed
+from repro.core.cost_model import LAMBDA_GPU_PRICES, gpu_rental_cost
+
+
+def run(verbose=True):
+    tiers_def = [
+        ("V100", 0.68, 3),
+        ("A6000", 0.78, 2),
+        ("A100", 0.85, 1),
+        ("H100", 0.90, 1),
+    ]
+    models = []
+    for i, (gpu, acc, k) in enumerate(tiers_def):
+        for j in range(k):
+            models.append(PoolModel(f"t{i}m{j}", skill_for_accuracy(acc), 10 ** i, seed=i * 10 + j))
+    y, _, logits = sample_pool_logits(models, 10_000, seed=7, difficulty_beta=(1, 3))
+    yc, _, logits_c = sample_pool_logits(models, 400, seed=77, difficulty_beta=(1, 3))
+
+    def tier_logits(i, pool, n):
+        names = [m.name for m in models if m.name.startswith(f"t{i}")]
+        return np.stack([pool[nm] for nm in names])
+
+    # calibrate per-tier thresholds (App. B)
+    thetas = []
+    for i in range(len(tiers_def) - 1):
+        Lc = jax.numpy.asarray(tier_logits(i, logits_c, 400))
+        oc = deferral.vote_rule(Lc, 0.0) if Lc.shape[0] > 1 else deferral.confidence_rule(Lc, 0.0)
+        th, _ = calibration.estimate_threshold(
+            np.asarray(oc.score), np.asarray(oc.pred) == yc, epsilon=0.02, n_samples=100
+        )
+        thetas.append(th)
+    thetas.append(-1.0)
+
+    fns = []
+    specs = []
+    for i, (gpu, acc, k) in enumerate(tiers_def):
+        Lfull = tier_logits(i, logits, len(y))
+        fns.append(lambda b, L=Lfull: jax.numpy.asarray(L[:, b["idx"]]))
+        rule = "vote" if k > 1 else "confidence"
+        specs.append(TierSpec(gpu, rule, thetas[i], k=k, cost=float(10 ** i)))
+    res = cascade_apply_routed(fns, specs, {"idx": np.arange(len(y))}, pad_to=64)
+
+    fracs = res.tier_counts / res.tier_counts.sum()
+    gpus = [t[0] for t in tiers_def]
+    abc_cost = gpu_rental_cost(gpus, fracs)
+    single_cost = LAMBDA_GPU_PRICES["H100"]
+    acc_abc = float((res.pred == y).mean())
+    acc_single = float((logits["t3m0"].argmax(-1) == y).mean())
+    if verbose:
+        for g, f in zip(gpus, fracs):
+            print(f"# {g}: frac={f:.2f} (${LAMBDA_GPU_PRICES[g]}/h)")
+        print(f"# ABC ${abc_cost:.2f}/h acc={acc_abc:.3f} vs single H100 "
+              f"${single_cost:.2f}/h acc={acc_single:.3f}")
+
+    L0 = jax.numpy.asarray(tier_logits(0, logits, len(y))[:, :256])
+    us = time_op(jax.jit(lambda l: deferral.vote_rule(l, 0.67).score), L0)
+    return csv_row(
+        "fig4b_gpu_rental",
+        us,
+        f"rental_cost_reduction={single_cost/abc_cost:.2f}x;tier1_frac={fracs[0]:.2f};acc_delta={acc_abc-acc_single:+.3f}",
+    )

@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks (CPU wall time of the XLA path vs the naive
+oracle — on TPU the Pallas path replaces the XLA path; the ratio shows the
+structural win of the chunked forms) + roofline-relevant derived stats."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_op
+from repro.kernels.agreement import ops as agree_ops, ref as agree_ref
+from repro.kernels.decode_attention import ops as dec_ops, ref as dec_ref
+from repro.kernels.flash_attention import ops as flash_ops, ref as flash_ref
+from repro.kernels.mamba2_ssd import ops as ssd_ops, ref as ssd_ref
+from repro.kernels.rwkv6_wkv import ops as wkv_ops, ref as wkv_ref
+
+
+def run(verbose=True):
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # flash attention
+    B, S, H, KVH, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.bfloat16)
+    f_chunk = jax.jit(lambda q, k, v: flash_ops.flash_attention(q, k, v, causal=True))
+    f_ref = jax.jit(lambda q, k, v: flash_ref.attention_ref(q, k, v, causal=True))
+    us_c, us_r = time_op(f_chunk, q, k, v, repeats=5), time_op(f_ref, q, k, v, repeats=5)
+    rows.append(csv_row("kernel_flash_attention_1k", us_c, f"ref_us={us_r:.0f};speedup={us_r/us_c:.2f}x"))
+
+    # decode attention over a 16k cache
+    S2 = 16384
+    kc = jax.random.normal(ks[3], (4, S2, KVH, hd), jnp.bfloat16)
+    vc = jax.random.normal(ks[4], (4, S2, KVH, hd), jnp.bfloat16)
+    qd = jax.random.normal(ks[5], (4, 1, H, hd), jnp.bfloat16)
+    d_ops = jax.jit(lambda q, k, v: dec_ops.decode_attention(q, k, v, S2))
+    us_d = time_op(d_ops, qd, kc, vc, repeats=5)
+    rows.append(csv_row("kernel_decode_attention_16k", us_d, f"bytes_swept={kc.nbytes*2}"))
+
+    # mamba2 ssd: chunked vs step-scan oracle
+    Bm, Sm, Hm, P, G, N = 2, 512, 4, 64, 1, 64
+    x = jax.random.normal(ks[6], (Bm, Sm, Hm, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (Bm, Sm, Hm))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[0], (Hm,)) * 0.3)
+    Bmat = jax.random.normal(ks[1], (Bm, Sm, G, N)) * 0.5
+    Cmat = jax.random.normal(ks[2], (Bm, Sm, G, N)) * 0.5
+    s_chunk = jax.jit(lambda *a: ssd_ops.ssd(*a, chunk=128))
+    s_ref = jax.jit(lambda *a: ssd_ref.ssd_ref(*a))
+    us_sc, us_sr = time_op(s_chunk, x, dt, A, Bmat, Cmat, repeats=5), time_op(s_ref, x, dt, A, Bmat, Cmat, repeats=5)
+    rows.append(csv_row("kernel_mamba2_ssd_512", us_sc, f"stepscan_us={us_sr:.0f};speedup={us_sr/us_sc:.2f}x"))
+
+    # rwkv6 wkv: chunked vs step-scan oracle
+    r = jax.random.normal(ks[3], (2, 512, 4, 64))
+    kk = jax.random.normal(ks[4], (2, 512, 4, 64))
+    vv = jax.random.normal(ks[5], (2, 512, 4, 64))
+    lw = -jnp.exp(jax.random.normal(ks[6], (2, 512, 4, 64)) * 0.5)
+    u = jax.random.normal(ks[7], (4, 64)) * 0.5
+    w_chunk = jax.jit(lambda *a: wkv_ops.wkv6(*a, chunk=32))
+    w_ref = jax.jit(lambda *a: wkv_ref.wkv6_ref(*a))
+    us_wc, us_wr = time_op(w_chunk, r, kk, vv, lw, u, repeats=5), time_op(w_ref, r, kk, vv, lw, u, repeats=5)
+    rows.append(csv_row("kernel_rwkv6_wkv_512", us_wc, f"stepscan_us={us_wr:.0f};speedup={us_wr/us_wc:.2f}x"))
+
+    # agreement reduce over a 32k vocab
+    logits = jax.random.normal(ks[0], (3, 64, 32768))
+    a_ops = jax.jit(lambda l: agree_ops.agreement(l)["vote_frac"])
+    a_ref = jax.jit(lambda l: agree_ref.agreement_ref(l)["vote_frac"])
+    us_a, us_ar = time_op(a_ops, logits, repeats=5), time_op(a_ref, logits, repeats=5)
+    rows.append(csv_row("kernel_agreement_32kvocab", us_a, f"ref_us={us_ar:.0f}"))
+
+    if verbose:
+        for r_ in rows:
+            print("#", r_)
+    return "\n".join(rows)

@@ -1,0 +1,76 @@
+"""Fig. 8 — cascade length (2–4 levels) × ensemble size (2–5) under
+parallel (ρ=1) and sequential (ρ=0) execution."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PoolModel, csv_row, sample_pool_logits, skill_for_accuracy, time_op,
+)
+from repro.core import calibration, deferral
+from repro.core.cost_model import ensemble_cost
+
+
+def _cascade(accs, k, rho, n=5000, seed=23):
+    flops = [10.0 ** (i + 1) for i in range(len(accs))]
+    all_models = []
+    for i, a in enumerate(accs):
+        all_models += [PoolModel(f"t{i}m{j}", skill_for_accuracy(a), flops[i], seed=i * 10 + j)
+                       for j in range(k)]
+    y, _, logits = sample_pool_logits(all_models, n, seed=seed)
+    yc, _, logits_c = sample_pool_logits(all_models, 400, seed=seed + 1)
+
+    pred = np.zeros(n, np.int64)
+    cost = 0.0
+    active = np.ones(n, bool)
+    for i, a in enumerate(accs):
+        names = [f"t{i}m{j}" for j in range(k)]
+        tier_cost = ensemble_cost(flops[i], k, rho)
+        cost += active.sum() * tier_cost
+        L = jax.numpy.asarray(np.stack([logits[nm] for nm in names]))
+        if i == len(accs) - 1:
+            o = deferral.vote_rule(L, -1.0)
+            pred[active] = np.asarray(o.pred)[active]
+            break
+        Lc = jax.numpy.asarray(np.stack([logits_c[nm] for nm in names]))
+        oc = deferral.vote_rule(Lc, 0.0)
+        theta, _ = calibration.estimate_threshold(
+            np.asarray(oc.score), np.asarray(oc.pred) == yc, epsilon=0.03, n_samples=100
+        )
+        o = deferral.vote_rule(L, theta)
+        take = active & ~np.asarray(o.defer)
+        pred[take] = np.asarray(o.pred)[take]
+        active &= np.asarray(o.defer)
+    return float((pred == y).mean()), cost / n
+
+
+def run(verbose=True):
+    ladders = {2: [0.7, 0.9], 3: [0.7, 0.8, 0.9], 4: [0.65, 0.75, 0.83, 0.9]}
+    best = {}
+    for rho in (1.0, 0.0):
+        for levels, accs in ladders.items():
+            # the comparable single model is the TOP model of this ladder
+            single_cost = 10.0 ** levels
+            for k in (2, 3, 5):
+                acc, cost = _cascade(accs, k, rho)
+                best.setdefault(rho, []).append(
+                    (acc, cost / single_cost, levels, k)
+                )
+                if verbose:
+                    print(f"# rho={rho} levels={levels} k={k}: acc={acc:.3f} "
+                          f"relcost={cost/single_cost:.2f}")
+    single_acc, _ = _cascade([0.9], 1, 1.0)
+
+    def best_at_budget(rho, rel_budget):
+        cands = [a for a, c, _, _ in best[rho] if c <= rel_budget]
+        return max(cands) if cands else float("nan")
+
+    d_par = best_at_budget(1.0, 0.6) - single_acc
+    d_seq = best_at_budget(0.0, 0.9) - single_acc
+    us = time_op(lambda: ensemble_cost(1.0, 3, 0.5), repeats=50)
+    return csv_row(
+        "fig8_parallelization",
+        us,
+        f"acc_delta_rho1_at_60pct_cost={d_par:+.3f};acc_delta_rho0_at_90pct_cost={d_seq:+.3f}",
+    )

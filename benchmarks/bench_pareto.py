@@ -1,0 +1,90 @@
+"""Fig. 2 — Pareto curves: ABC vs confidence-based cascades (WoC) vs best
+single models, accuracy vs FLOPs, on the calibrated synthetic pool."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PoolModel, csv_row, sample_pool_logits, skill_for_accuracy, time_op,
+)
+from repro.core import calibration, deferral
+from repro.kernels.agreement import ops as agree_ops
+
+
+def _pool():
+    # FLOPs ~ exponential in accuracy (paper Fig. 1: scaling-law costs)
+    accs = [0.55, 0.65, 0.75, 0.83, 0.90]
+    return [
+        PoolModel(f"m{i}", skill_for_accuracy(a), flops=10.0 ** (i + 1), seed=i)
+        for i, a in enumerate(accs)
+    ]
+
+
+def _acc(pred, y):
+    return float((pred == y).mean())
+
+
+def run(verbose=True):
+    models = _pool()
+    y, d, logits = sample_pool_logits(models, 6000, seed=3)
+    yc, dc, logits_c = sample_pool_logits(models, 600, seed=11)  # calibration
+
+    singles = [( _acc(logits[m.name].argmax(-1), y), m.flops) for m in models]
+
+    def abc_point(lo, hi, k=3):
+        """2-level ABC: k-ensemble of models[lo] -> models[hi]."""
+        ens_names = [models[lo].name] * 1  # same-skill members, distinct seeds
+        ens_models = [
+            PoolModel(f"e{j}", models[lo].skill, models[lo].flops, seed=100 + j)
+            for j in range(k)
+        ]
+        _, _, el = sample_pool_logits(ens_models, len(y), seed=3)
+        _, _, el_c = sample_pool_logits(ens_models, len(yc), seed=11)
+        L = np.stack([el[m.name] for m in ens_models])
+        Lc = np.stack([el_c[m.name] for m in ens_models])
+        out_c = deferral.vote_rule(jax.numpy.asarray(Lc), 0.0)
+        theta, _ = calibration.estimate_threshold(
+            np.asarray(out_c.score), np.asarray(out_c.pred) == yc, epsilon=0.03,
+            n_samples=100,
+        )
+        out = deferral.vote_rule(jax.numpy.asarray(L), theta)
+        defer = np.asarray(out.defer)
+        pred = np.where(defer, logits[models[hi].name].argmax(-1), np.asarray(out.pred))
+        # rho=1: ensemble costs one member's flops (parallel)
+        flops = models[lo].flops + defer.mean() * models[hi].flops
+        return _acc(pred, y), flops
+
+    def woc_point(lo, hi, theta):
+        out = deferral.confidence_rule(jax.numpy.asarray(logits[models[lo].name]), theta)
+        defer = np.asarray(out.defer)
+        pred = np.where(defer, logits[models[hi].name].argmax(-1), np.asarray(out.pred))
+        return _acc(pred, y), models[lo].flops + defer.mean() * models[hi].flops
+
+    abc_curve = [abc_point(i, 4) for i in range(4)]
+    woc_curve = [woc_point(i, 4, t) for i in range(4) for t in (0.6, 0.8, 0.9, 0.95)]
+    best_single = singles[-1]
+
+    # derived: accuracy delta of ABC vs best single at <= 70% of its FLOPs
+    cheap = [a for a, f in abc_curve if f <= best_single[1] * 0.7]
+    delta = (max(cheap) - best_single[0]) if cheap else float("nan")
+
+    # the hot op: the agreement reduce itself
+    E, B, V = 3, 256, 8192
+    big = jax.numpy.asarray(np.random.default_rng(0).normal(size=(E, B, V)).astype(np.float32))
+    fn = jax.jit(lambda l: agree_ops.agreement(l)["vote_frac"])
+    us = time_op(fn, big)
+
+    if verbose:
+        for (a, f) in singles:
+            print(f"# single acc={a:.3f} flops={f:.0f}")
+        for (a, f) in abc_curve:
+            print(f"# ABC    acc={a:.3f} flops={f:.0f}")
+        woc_best = {}
+        for (a, f) in woc_curve:
+            woc_best[round(f, -1)] = max(woc_best.get(round(f, -1), 0), a)
+    return csv_row(
+        "fig2_pareto",
+        us,
+        f"abc_acc_delta_at_70pct_flops={delta:+.3f};best_single={best_single[0]:.3f}",
+    )

@@ -1,0 +1,41 @@
+"""Fig. 7 — existence of safe deferral rules: selection rate as a function
+of ensemble accuracy for error tolerances ε ∈ {1%, 3%, 5%}."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PoolModel, csv_row, sample_pool_logits, skill_for_accuracy, time_op,
+)
+from repro.core import calibration, deferral
+
+
+def run(verbose=True):
+    accs = (0.5, 0.6, 0.7, 0.8, 0.88)
+    table = {}
+    for eps in (0.01, 0.03, 0.05):
+        row = []
+        for acc in accs:
+            ms = [PoolModel(f"m{j}", skill_for_accuracy(acc), 1.0, seed=j) for j in range(3)]
+            y, _, logits = sample_pool_logits(ms, 5000, seed=19)
+            L = jax.numpy.asarray(np.stack([logits[m.name] for m in ms]))
+            out = deferral.vote_rule(L, 0.0)
+            theta, info = calibration.estimate_threshold(
+                np.asarray(out.score), np.asarray(out.pred) == y, epsilon=eps
+            )
+            row.append(info["selection_rate"])
+        table[eps] = row
+        if verbose:
+            print(f"# eps={eps:.0%}: sel = " + " ".join(f"{s:.2f}" for s in row))
+
+    # paper: selection rates grow with accuracy and with laxer epsilon
+    mono_acc = all(a <= b + 0.02 for a, b in zip(table[0.05], table[0.05][1:]))
+    sel_top_5 = table[0.05][-1]
+    sel_top_1 = table[0.01][-1]
+    us = time_op(lambda: calibration.selection_rate(np.linspace(0, 1, 5000), 0.6), repeats=50)
+    return csv_row(
+        "fig7_selection_rates",
+        us,
+        f"sel_at_top_acc_eps5={sel_top_5:.2f};eps1={sel_top_1:.2f};monotone_in_acc={mono_acc}",
+    )

@@ -1,0 +1,53 @@
+"""Serving-engine benchmark: real (reduced) models end to end — cascade
+classify throughput and per-tier routing on the mixture task (the live
+counterpart of Table 5's exit-fraction breakdown)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs.base import ModelConfig
+from repro.core import ensemble as ens
+from repro.core.cascade import TierSpec
+from repro.models.params import unbox
+from repro.serve import CascadeServer, CascadeTier
+
+SMALL = ModelConfig(
+    name="bench-s", family="dense", n_layers=2, d_model=64, d_ff=128,
+    vocab_size=256, n_heads=4, n_kv_heads=2, remat=False,
+)
+BIG = ModelConfig(
+    name="bench-b", family="dense", n_layers=4, d_model=128, d_ff=256,
+    vocab_size=256, n_heads=8, n_kv_heads=4, remat=False,
+)
+
+
+def run(verbose=True):
+    v1, _ = unbox(ens.init_ensemble(SMALL, 3, jax.random.PRNGKey(0)))
+    one = ens.take_member(v1, 0)
+    same = jax.tree.map(lambda x: jnp.stack([x, x, x]), one)  # agreeing tier
+    v2, _ = unbox(ens.init_ensemble(BIG, 1, jax.random.PRNGKey(1)))
+    server = CascadeServer([
+        CascadeTier(SMALL, same, TierSpec("t1", "vote", 0.9, k=3, cost=1.0)),
+        CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1, cost=30.0)),
+    ])
+    toks = np.random.default_rng(0).integers(0, 256, (64, 32)).astype(np.int32)
+    server.classify(toks)  # warmup/compile
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        res = server.classify(toks)
+    dt = (time.perf_counter() - t0) / reps
+    us = dt * 1e6
+    qps = len(toks) / dt
+    if verbose:
+        print(f"# cascade classify: {qps:.0f} q/s, tier fractions "
+              f"{np.round(server.tier_fractions(res), 2).tolist()}")
+    return csv_row(
+        "serving_cascade_classify", us,
+        f"qps={qps:.0f};tier1_frac={server.tier_fractions(res)[0]:.2f};cost_vs_all_big={res.cost/(30.0*len(toks)):.2f}",
+    )

@@ -1,0 +1,100 @@
+"""Shared benchmark utilities.
+
+The paper's tables compare cascades built from a *pool of pretrained models*
+of varying accuracy/cost.  Offline, we reproduce each table's mechanism with
+a calibrated synthetic pool: examples carry a latent difficulty d ~ U(0,1);
+a model of skill s answers correctly with probability sigmoid(a·(s - d) + b),
+and its logits express confidence correlated with its margin — so ensembles
+of equal-skill models disagree exactly on the hard tail, which is the
+structure ABC exploits.  Every bench also times its hot op on real arrays
+(the `us_per_call` column)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PoolModel:
+    name: str
+    skill: float  # ~ accuracy level
+    flops: float  # per-example cost
+    seed: int = 0
+
+
+def accuracy_of(skill: float, sharp: float = 6.0) -> float:
+    d = np.linspace(0, 1, 2001)
+    return float(np.mean(1 / (1 + np.exp(-sharp * (skill - d)))))
+
+
+def skill_for_accuracy(target: float) -> float:
+    lo, hi = -1.0, 3.0
+    for _ in range(60):
+        mid = (lo + hi) / 2
+        if accuracy_of(mid) < target:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2
+
+
+def sample_pool_logits(
+    models: Sequence[PoolModel],
+    n: int,
+    n_classes: int = 10,
+    seed: int = 0,
+    sharp: float = 6.0,
+    difficulty_beta=None,
+):
+    """Returns (y (n,), difficulty (n,), logits dict name -> (n, C)).
+
+    difficulty_beta=(a, b) skews the difficulty distribution; the paper's
+    deployment scenarios assume easy-dominated traffic (that is ABC's
+    premise — Table 5 measures 52–93% of samples exiting at tier 1), which
+    (1, 3) approximates.  Default is uniform (the hardest case for ABC)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, n_classes, n)
+    d = rng.beta(*difficulty_beta, n) if difficulty_beta else rng.random(n)
+    import zlib
+
+    out = {}
+    for m in models:
+        # zlib.crc32: stable across processes (builtin hash() is randomized)
+        mr = np.random.default_rng(seed * 7919 + m.seed + zlib.crc32(m.name.encode()) % 1000)
+        p_correct = 1 / (1 + np.exp(-sharp * (m.skill - d)))
+        correct = mr.random(n) < p_correct
+        logits = mr.normal(0, 1, (n, n_classes)).astype(np.float32)
+        # confidence scales with margin from the decision boundary
+        conf = 1.5 + 4.0 * np.abs(m.skill - d)
+        wrong = (y + 1 + mr.integers(0, n_classes - 1, n)) % n_classes
+        target = np.where(correct, y, wrong)
+        logits[np.arange(n), target] += conf
+        out[m.name] = logits
+    return y, d, out
+
+
+def time_op(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
+    """Median wall time in microseconds per call."""
+    import jax
+
+    def _block(r):
+        try:
+            jax.block_until_ready(r)
+        except Exception:
+            pass
+
+    for _ in range(warmup):
+        _block(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,50 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus '#' commentary lines).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = [
+    "bench_pareto",            # Fig 2
+    "bench_cost_savings",      # Fig 3
+    "bench_edge_cloud",        # Fig 4a
+    "bench_gpu_rental",        # Fig 4b + Tables 4/5
+    "bench_api_cost",          # Fig 5 + Table 1
+    "bench_threshold",         # Fig 6 (App B)
+    "bench_selection_rate",    # Fig 7 (App C)
+    "bench_parallelization",   # Fig 8 (App E.1)
+    "bench_kernels",           # kernels micro-bench
+    "bench_serving",           # live cascade serving (Table 5 counterpart)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    names = [b for b in BENCHES if args.only is None or args.only in b]
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            row = mod.run(verbose=not args.quiet)
+            print(row, flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},nan,ERROR", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

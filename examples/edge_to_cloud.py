@@ -1,0 +1,67 @@
+"""Edge-to-cloud placement simulation (paper §5.2.1): a tiny on-device
+ensemble answers agreed requests locally; only disagreements cross the
+network.  Uses the paper's delay grid and trained tier models.
+
+    PYTHONPATH=src python examples/edge_to_cloud.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import calibration, deferral, ensemble as ens
+from repro.core.cost_model import EDGE_DELAYS, EdgeCloudCost
+from repro.data.synthetic import MixtureTask
+from repro.models import api
+from repro.models.params import unbox
+from repro.optim.adamw import OptimConfig
+from repro.train import init_train_state, make_train_step
+
+EDGE = ModelConfig(name="edge", family="dense", n_layers=1, d_model=32, d_ff=64,
+                   vocab_size=256, n_heads=2, n_kv_heads=2, remat=False)
+CLOUD = ModelConfig(name="cloud", family="dense", n_layers=3, d_model=128, d_ff=256,
+                    vocab_size=256, n_heads=4, n_kv_heads=4, remat=False)
+TASK = MixtureTask(vocab=256, n_classes=16, seq_len=32, easy_frac=0.6, seed=0)
+
+
+def train(cfg, steps, seed):
+    toks, labels, _ = TASK.sample(4096, seed=seed + 100)
+    values, _ = unbox(api.init_params(cfg, jax.random.PRNGKey(seed)))
+    ocfg = OptimConfig(lr=2e-3)
+    state = init_train_state(values, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, total_steps=steps, warmup_steps=20))
+    rng = np.random.default_rng(seed)
+    mask = np.zeros((64, TASK.seq_len), np.float32); mask[:, -1] = 1.0
+    for _ in range(steps):
+        idx = rng.integers(0, len(toks), 64)
+        tgt = np.zeros((64, TASK.seq_len), np.int32); tgt[:, -1] = labels[idx]
+        state, _ = step(state, {"tokens": toks[idx], "targets": tgt, "mask": mask})
+    return state.params
+
+
+print("training edge ensemble (3x tiny) and cloud model ...")
+edge = jax.tree.map(lambda *xs: jnp.stack(xs), *[train(EDGE, 200, s) for s in (0, 1, 2)])
+cloud = jax.tree.map(lambda x: x[None], train(CLOUD, 400, 9))
+
+cal_toks, cal_y, _ = TASK.sample(100, seed=77)
+lo = ens.ensemble_last_logits(edge, {"tokens": jnp.asarray(cal_toks)}, EDGE)
+oc = deferral.vote_rule(lo, 0.0)
+theta, _ = calibration.estimate_threshold(
+    np.asarray(oc.score), np.asarray(oc.pred) == cal_y, epsilon=0.05
+)
+
+test_toks, test_y, _ = TASK.sample(2048, seed=42)
+L = ens.ensemble_last_logits(edge, {"tokens": jnp.asarray(test_toks)}, EDGE)
+out = deferral.vote_rule(L, theta)
+defer = np.asarray(out.defer)
+cloud_logits = ens.ensemble_last_logits(cloud, {"tokens": jnp.asarray(test_toks)}, CLOUD)
+pred = np.where(defer, np.asarray(cloud_logits[0].argmax(-1)), np.asarray(out.pred))
+
+print(f"\ndefer rate: {defer.mean():.2f}  "
+      f"accuracy: ABC {(pred == test_y).mean():.3f} vs cloud-only "
+      f"{(np.asarray(cloud_logits[0].argmax(-1)) == test_y).mean():.3f}")
+print(f"{'delay tier':12s} {'ABC latency':>12s} {'cloud-only':>12s} {'reduction':>10s}")
+for name, delay in EDGE_DELAYS.items():
+    cm = EdgeCloudCost(delay=delay)
+    a, c = cm.mean_latency(defer.mean()), cm.mean_latency(1.0)
+    print(f"{name:12s} {a*1e3:10.3f}ms {c*1e3:10.3f}ms {c/a:9.1f}x")

@@ -1,0 +1,93 @@
+"""End-to-end driver (the paper-shaped workflow): TRAIN tier models on a
+mixture-difficulty task for a few hundred steps, CALIBRATE the agreement
+threshold on ~100 held-out samples (App. B), then SERVE a drop-in cascade
+and report the paper's headline quantities — accuracy vs the large model
+(Prop 4.1.1) and cost vs always-large (Prop 4.1.2).
+
+    PYTHONPATH=src python examples/train_then_cascade.py [--steps 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import calibration, deferral, ensemble as ens
+from repro.core.cascade import TierSpec
+from repro.data.synthetic import MixtureTask
+from repro.models import api
+from repro.models.params import unbox
+from repro.optim.adamw import OptimConfig
+from repro.serve import CascadeServer, CascadeTier
+from repro.train import init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--big-steps", type=int, default=600)
+args = ap.parse_args()
+
+SMALL = ModelConfig(name="ex-small", family="dense", n_layers=1, d_model=48,
+                    d_ff=96, vocab_size=256, n_heads=2, n_kv_heads=2, remat=False)
+BIG = ModelConfig(name="ex-big", family="dense", n_layers=3, d_model=160,
+                  d_ff=320, vocab_size=256, n_heads=4, n_kv_heads=4, remat=False)
+TASK = MixtureTask(vocab=256, n_classes=16, seq_len=32, easy_frac=0.6, seed=0)
+
+
+def train_classifier(cfg, steps, seed, lr=2e-3, batch=64):
+    toks, labels, _ = TASK.sample(4096, seed=seed + 100)
+    values, _ = unbox(api.init_params(cfg, jax.random.PRNGKey(seed)))
+    ocfg = OptimConfig(lr=lr, weight_decay=0.01)
+    state = init_train_state(values, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, total_steps=steps, warmup_steps=20))
+    rng = np.random.default_rng(seed)
+    mask = np.zeros((batch, TASK.seq_len), np.float32)
+    mask[:, -1] = 1.0
+    for i in range(steps):
+        idx = rng.integers(0, len(toks), batch)
+        tgt = np.zeros((batch, TASK.seq_len), np.int32)
+        tgt[:, -1] = labels[idx]
+        state, m = step(state, {"tokens": toks[idx], "targets": tgt, "mask": mask})
+        if (i + 1) % 100 == 0:
+            print(f"  [{cfg.name} seed {seed}] step {i+1}: loss {float(m['loss']):.3f}")
+    return state.params
+
+
+print("training 3 small tier members + 1 large model ...")
+small_members = [train_classifier(SMALL, args.steps, s) for s in (0, 1, 2)]
+stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *small_members)
+big = jax.tree.map(lambda x: x[None], train_classifier(BIG, args.big_steps, 7))
+
+print("calibrating theta on 100 held-out samples ...")
+cal_toks, cal_y, _ = TASK.sample(100, seed=999)
+logits = ens.ensemble_last_logits(stacked, {"tokens": jnp.asarray(cal_toks)}, SMALL)
+out = deferral.vote_rule(logits, theta=0.0)
+theta, info = calibration.estimate_threshold(
+    np.asarray(out.score), np.asarray(out.pred) == cal_y, epsilon=0.05
+)
+print(f"  theta={theta:.3f}  selection_rate={info['selection_rate']:.2f}  "
+      f"failure_rate={info['failure_rate']:.3f}")
+
+print("serving 1024 fresh requests through the cascade ...")
+test_toks, test_y, easy = TASK.sample(1024, seed=1234)
+server = CascadeServer([
+    CascadeTier(SMALL, stacked, TierSpec("small-x3", "vote", theta, k=3, cost=1.0)),
+    CascadeTier(BIG, big, TierSpec("big", "confidence", -1.0, k=1, cost=25.0)),
+])
+res = server.classify(test_toks)
+big_logits = ens.ensemble_last_logits(big, {"tokens": jnp.asarray(test_toks)}, BIG)
+big_pred = np.asarray(big_logits[0].argmax(-1))
+
+acc_c = (res.pred == test_y).mean()
+acc_b = (big_pred == test_y).mean()
+fr = server.tier_fractions(res)
+print(f"\n=== drop-in cascade report ===")
+print(f"accuracy: cascade {acc_c:.3f} vs large-only {acc_b:.3f} "
+      f"(Prop 4.1.1: within calibrated eps)")
+print(f"tier fractions: small {fr[0]:.2f} / big {fr[1]:.2f}")
+print(f"cost: {res.cost:.0f} vs always-large {25.0 * len(test_toks):.0f} "
+      f"({25.0 * len(test_toks) / res.cost:.2f}x cheaper)")
+sel = res.tier_of == 0
+if sel.any():
+    print(f"easy-fraction at tier1 exits {easy[sel].mean():.2f} vs deferred "
+          f"{easy[~sel].mean():.2f} (ABC routes by difficulty)")

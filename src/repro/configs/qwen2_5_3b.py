@@ -1,0 +1,19 @@
+"""qwen2.5-3b [dense] — GQA kv=2, QKV bias.
+
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936.
+[hf:Qwen/Qwen2.5-0.5B family]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    n_layers=36,
+    d_model=2048,
+    d_ff=11008,
+    vocab_size=151936,
+    n_heads=16,
+    n_kv_heads=2,
+    qkv_bias=True,
+    norm_type="rmsnorm",
+)

@@ -1,0 +1,25 @@
+"""Agreement-Based Cascading (ABC) — the paper's contribution.
+
+ensemble.py     stacked-weight ensembles, vmapped member forward, and the
+                ensemble-parallel ('ensemble' logical axis -> 'pod' mesh
+                axis) mapping used by the multi-pod dry-run
+deferral.py     the agreement deferral rules r_v (Eq. 3) / r_s (Eq. 4) and
+                the score-based baselines (WoC confidence, entropy)
+calibration.py  threshold estimation from ~100 validation samples (App. B)
+cascade.py      cascade execution: fully-jitted masked form (lowerable on
+                the production mesh) and host-routed compacting form (real
+                savings; used by serve/)
+cost_model.py   gamma / rho / Eq. 1 / Prop 4.1.2 cost accounting + the
+                paper's published deployment cost tables
+theory.py       Prop 4.1 / Appendix A quantities for the property tests
+"""
+from repro.core import calibration, cascade, cost_model, deferral, ensemble, theory
+
+__all__ = [
+    "calibration",
+    "cascade",
+    "cost_model",
+    "deferral",
+    "ensemble",
+    "theory",
+]

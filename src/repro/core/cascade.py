@@ -1,0 +1,148 @@
+"""Cascade execution (Algorithm 1).
+
+Two execution forms:
+
+``cascade_apply_dense``  — fully-jitted masked form: every tier evaluates the
+    whole batch and the first agreeing tier's answer is selected with
+    ``jnp.where``.  No FLOPs are saved, but the whole cascade is a single
+    XLA program that lowers/shards on the production mesh — this is what the
+    cascade dry-run compiles, and it doubles as the reference semantics.
+
+``cascade_apply_routed`` — host-routed compacting form: after tier i only the
+    deferred examples are gathered (padded to a multiple of ``pad_to``) and
+    sent to tier i+1.  This is the deployment path (serve/engine.py) and the
+    one whose measured cost reproduces Prop 4.1.2.
+
+Both forms take per-tier callables ``tier_fns[i](batch_slice) -> logits
+(E_i, B, V)`` so they work for classifier heads, prefill last-token logits,
+or sampled-answer ids alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import deferral
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One cascade level: an ensemble of k models + its deferral rule."""
+
+    name: str
+    rule: str  # 'vote' | 'score' | 'confidence' | 'entropy'
+    theta: float
+    k: int = 1
+    cost: float = 1.0  # per-example cost in whatever unit the scenario uses
+
+
+@dataclasses.dataclass
+class CascadeResult:
+    pred: np.ndarray  # (B,)
+    tier_of: np.ndarray  # (B,) index of the answering tier
+    scores: np.ndarray  # (B,) deferral score at the answering tier
+    tier_counts: np.ndarray  # (n_tiers,) examples answered per tier
+    evaluated: np.ndarray  # (n_tiers,) examples *evaluated* per tier
+    cost: float  # total cost under the specs' per-example costs
+
+
+def cascade_apply_dense(
+    tier_fns: Sequence[Callable],
+    specs: Sequence[TierSpec],
+    batch,
+):
+    """Jit-friendly masked cascade.  Returns (pred, tier_of, scores)."""
+    n = len(tier_fns)
+    pred = None
+    tier_of = None
+    score_out = None
+    decided = None
+    for i, (fn, spec) in enumerate(zip(tier_fns, specs)):
+        logits = fn(batch)
+        out = deferral.apply_rule(spec.rule, logits, spec.theta)
+        last = i == n - 1
+        take = jnp.logical_or(~out.defer, jnp.bool_(last))
+        if pred is None:
+            pred = out.pred
+            tier_of = jnp.zeros_like(out.pred)
+            score_out = out.score
+            decided = take
+        else:
+            newly = jnp.logical_and(~decided, take)
+            pred = jnp.where(newly, out.pred, pred)
+            tier_of = jnp.where(newly, i, tier_of)
+            score_out = jnp.where(newly, out.score, score_out)
+            decided = jnp.logical_or(decided, take)
+    return pred, tier_of, score_out
+
+
+def _pad_rows(x, n):
+    if x.shape[0] == n:
+        return x
+    pad = [(0, n - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return np.pad(x, pad, mode="edge")
+
+
+def cascade_apply_routed(
+    tier_fns: Sequence[Callable],
+    specs: Sequence[TierSpec],
+    batch: dict,
+    *,
+    pad_to: int = 8,
+) -> CascadeResult:
+    """Host-routed cascade with batch compaction between tiers.
+
+    ``batch`` is a dict of numpy/jax arrays with a leading example axis.
+    Only deferred examples flow to the next tier (padded up to ``pad_to`` to
+    bound recompilation).  Cost accounting: spec.cost · examples evaluated
+    (the padding is charged too — that is the real serving cost).
+    """
+    B = int(jax.tree.leaves(batch)[0].shape[0])
+    n = len(tier_fns)
+    pred = np.zeros((B,), np.int32)
+    tier_of = np.full((B,), -1, np.int32)
+    scores = np.zeros((B,), np.float32)
+    tier_counts = np.zeros((n,), np.int64)
+    evaluated = np.zeros((n,), np.int64)
+    cost = 0.0
+
+    active = np.arange(B)
+    cur = {k: np.asarray(v) for k, v in batch.items()}
+    for i, (fn, spec) in enumerate(zip(tier_fns, specs)):
+        m = len(active)
+        padded = -(-m // pad_to) * pad_to
+        fed = {k: _pad_rows(v, padded) for k, v in cur.items()}
+        logits = fn(fed)
+        out = deferral.apply_rule(spec.rule, logits, spec.theta)
+        defer = np.asarray(out.defer)[:m]
+        p = np.asarray(out.pred)[:m]
+        s = np.asarray(out.score)[:m]
+        evaluated[i] = padded
+        cost += spec.cost * padded
+
+        last = i == n - 1
+        take = ~defer | last
+        idx = active[take]
+        pred[idx] = p[take]
+        tier_of[idx] = i
+        scores[idx] = s[take]
+        tier_counts[i] = take.sum()
+
+        if last or not (~take).any():
+            break
+        keep = ~take
+        active = active[keep]
+        cur = {k: v[:m][keep] for k, v in cur.items()}
+
+    return CascadeResult(
+        pred=pred,
+        tier_of=tier_of,
+        scores=scores,
+        tier_counts=tier_counts,
+        evaluated=evaluated,
+        cost=cost,
+    )

@@ -1,0 +1,101 @@
+"""Deferral rules.
+
+The paper's two agreement flavors (§4.3):
+  r_v (Eq. 3) — vote: defer when the majority vote fraction <= θ_v
+                (black-box: needs only each member's prediction)
+  r_s (Eq. 4) — score: defer when the mean majority-class probability <= θ_s
+                (white-box: needs member logits)
+
+Baselines (§2.1):
+  confidence (Wisdom-of-Committees-style): single model max-softmax <= θ
+  entropy: defer when predictive entropy >= θ
+
+Every rule maps example-level statistics to a boolean defer mask (True =
+send to the next tier) plus the prediction the tier would emit if selected.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.agreement import ops as agree_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleOutput:
+    pred: jax.Array  # (B,) int32 tier prediction
+    score: jax.Array  # (B,) f32 the statistic s(x)
+    defer: jax.Array  # (B,) bool r(x)=1
+
+
+def vote_rule(logits: jax.Array, theta: float) -> RuleOutput:
+    """Eq. 3 on member logits (E, B, V)."""
+    stats = agree_ops.agreement(logits)
+    s = stats["vote_frac"]
+    return RuleOutput(pred=stats["pred"], score=s, defer=s <= theta)
+
+
+def vote_rule_from_preds(preds: jax.Array, theta: float) -> RuleOutput:
+    """Eq. 3 black-box flavor: preds (E, B) are member answers (e.g. sampled
+    generations mapped to canonical ids).  No logits needed."""
+    E = preds.shape[0]
+    votes = (preds[:, None, :] == preds[None, :, :]).sum(axis=0)  # (E, B)
+    # canonical tie-break (as in kernels/agreement): max votes, smallest id
+    vmax = jnp.max(votes, axis=0, keepdims=True)
+    pred = jnp.min(jnp.where(votes == vmax, preds, jnp.int32(2**30)), axis=0)
+    s = vmax[0].astype(jnp.float32) / E
+    return RuleOutput(pred=pred, score=s, defer=s <= theta)
+
+
+def score_rule(logits: jax.Array, theta: float) -> RuleOutput:
+    """Eq. 4 on member logits (E, B, V)."""
+    stats = agree_ops.agreement(logits)
+    s = stats["mean_score"]
+    return RuleOutput(pred=stats["pred"], score=s, defer=s <= theta)
+
+
+def confidence_rule(logits: jax.Array, theta: float) -> RuleOutput:
+    """WoC-style single-model confidence; logits (B, V) or (1, B, V)."""
+    if logits.ndim == 3:
+        logits = logits[0]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    s = jnp.max(probs, axis=-1)
+    return RuleOutput(
+        pred=jnp.argmax(logits, axis=-1).astype(jnp.int32), score=s, defer=s <= theta
+    )
+
+
+def entropy_rule(logits: jax.Array, theta: float) -> RuleOutput:
+    """Defer when predictive entropy (normalized to [0,1]) >= theta.
+    Score is 1 - normalized entropy so that 'higher score = more confident'
+    matches the other rules."""
+    if logits.ndim == 3:
+        logits = logits.mean(axis=0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1) / jnp.log(logits.shape[-1])
+    s = 1.0 - ent
+    return RuleOutput(
+        pred=jnp.argmax(logits, axis=-1).astype(jnp.int32), score=s, defer=s <= theta
+    )
+
+
+def _margin_rule(logits, theta):
+    from repro.core.router_baselines import margin_rule
+
+    return margin_rule(logits, theta)
+
+
+RULES = {
+    "vote": vote_rule,
+    "score": score_rule,
+    "confidence": confidence_rule,
+    "entropy": entropy_rule,
+    "margin": _margin_rule,
+}
+
+
+def apply_rule(kind: str, logits: jax.Array, theta: float) -> RuleOutput:
+    return RULES[kind](logits, theta)

@@ -1,0 +1,61 @@
+"""Stacked-weight ensembles.
+
+An ensemble H^k is k models of the *same* config whose parameters are
+stacked along a leading 'ensemble' logical axis.  The member forward is a
+single ``vmap``, which realizes the paper's ρ=1 (fully parallel) execution
+structurally; on the multi-pod mesh the 'ensemble' axis maps to the 'pod'
+mesh axis so each pod holds one member and agreement is the only cross-pod
+collective (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models.params import Box, is_box, unbox
+
+
+def init_ensemble(cfg: ModelConfig, k: int, rng: jax.Array):
+    """Boxed params with a leading 'ensemble' axis on every leaf."""
+    keys = jax.random.split(rng, k)
+    stacked = jax.vmap(lambda r: api.init_params(cfg, r))(keys)
+    return jax.tree.map(
+        lambda b: Box(b.value, ("ensemble",) + b.axes), stacked, is_leaf=is_box
+    )
+
+
+def ensemble_logits(values, batch, cfg: ModelConfig, *, window_override=None):
+    """Full-sequence logits for every member: (E, B, S, V)."""
+    return jax.vmap(
+        lambda p: api.forward_logits(p, batch, cfg, window_override=window_override)
+    )(values)
+
+
+def ensemble_last_logits(values, batch, cfg: ModelConfig):
+    """Last-token (classification-head) logits per member: (E, B, V)."""
+    def one(p):
+        logits, _ = api.prefill(p, batch, cfg)
+        return logits
+
+    return jax.vmap(one)(values)
+
+
+def ensemble_decode_step(values, token, caches, pos, cfg: ModelConfig):
+    """Vmapped decode step; caches carry a leading ensemble axis.
+    Returns (logits (E, B, V), new caches)."""
+    return jax.vmap(
+        lambda p, c: api.decode_step(p, token, c, pos, cfg)
+    )(values, caches)
+
+
+def member_count(values) -> int:
+    return jax.tree.leaves(values)[0].shape[0]
+
+
+def take_member(values, i: int):
+    return jax.tree.map(lambda v: v[i], values)

@@ -1,0 +1,98 @@
+"""Trained-router baselines (paper §2.2) — the setups ABC competes with.
+
+ABC's pitch is being *training-free*; to compare fairly we implement a real
+(small) learned router à la FrugalGPT: a logistic scorer on feature vectors
+(e.g. the tier model's last hidden state or its logits) trained to predict
+"is the tier's answer correct", used exactly like a score-based deferral
+rule.  The training loop is plain JAX — its cost is the "setup cost" the
+paper notes the baselines pay per task/model change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deferral import RuleOutput
+
+
+@dataclasses.dataclass
+class LearnedRouter:
+    w: jax.Array  # (F,)
+    b: jax.Array  # ()
+    mu: jax.Array  # (F,) feature normalization
+    sd: jax.Array  # (F,)
+
+    def score(self, feats: jax.Array) -> jax.Array:
+        z = (feats - self.mu) / self.sd
+        return jax.nn.sigmoid(z @ self.w + self.b)
+
+
+def logits_features(logits: jax.Array) -> jax.Array:
+    """Router features from tier logits (B, V): top-p, margin, entropy,
+    logsumexp — the standard confidence summary vector."""
+    lf = logits.astype(jnp.float32)
+    p = jax.nn.softmax(lf, axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    ent = -jnp.sum(p * jnp.log(p + 1e-9), axis=-1) / jnp.log(lf.shape[-1])
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    return jnp.stack([top2[:, 0], top2[:, 0] - top2[:, 1], ent, lse], axis=-1)
+
+
+def train_router(
+    feats: np.ndarray,  # (N, F)
+    correct: np.ndarray,  # (N,) bool — was the tier's answer right?
+    *,
+    steps: int = 300,
+    lr: float = 0.1,
+    seed: int = 0,
+) -> LearnedRouter:
+    X = jnp.asarray(feats, jnp.float32)
+    y = jnp.asarray(correct, jnp.float32)
+    mu, sd = X.mean(0), X.std(0) + 1e-6
+    Xn = (X - mu) / sd
+    w = jax.random.normal(jax.random.PRNGKey(seed), (X.shape[1],)) * 0.01
+    b = jnp.zeros(())
+
+    def loss(params):
+        w, b = params
+        z = Xn @ w + b
+        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+    g = jax.jit(jax.grad(loss))
+    params = (w, b)
+    for _ in range(steps):
+        gw, gb = g(params)
+        params = (params[0] - lr * gw, params[1] - lr * gb)
+    return LearnedRouter(w=params[0], b=params[1], mu=mu, sd=sd)
+
+
+def router_rule(
+    router: LearnedRouter, logits: jax.Array, theta: float
+) -> RuleOutput:
+    """Use a trained router as a deferral rule (FrugalGPT-style)."""
+    if logits.ndim == 3:
+        logits = logits[0]
+    s = router.score(logits_features(logits))
+    return RuleOutput(
+        pred=jnp.argmax(logits, axis=-1).astype(jnp.int32),
+        score=s,
+        defer=s <= theta,
+    )
+
+
+def margin_rule(logits: jax.Array, theta: float) -> RuleOutput:
+    """Top-1/top-2 probability margin (another classic score rule)."""
+    if logits.ndim == 3:
+        logits = logits.mean(axis=0)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    s = top2[:, 0] - top2[:, 1]
+    return RuleOutput(
+        pred=jnp.argmax(logits, axis=-1).astype(jnp.int32),
+        score=s,
+        defer=s <= theta,
+    )

@@ -1,0 +1,4 @@
+from repro.data.pipeline import TokenDataset, batches, make_lm_batch
+from repro.data.synthetic import MixtureTask, sequence_task
+
+__all__ = ["TokenDataset", "batches", "make_lm_batch", "MixtureTask", "sequence_task"]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the compute hot spots ABC serves.
+
+Each kernel package ships:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit-friendly wrapper with an XLA (chunked pure-jnp) fallback;
+              the multi-device dry-run uses the XLA path since this container
+              lowers for CPU; the TPU path is selected via
+              ``repro.kernels.config.set_impl('pallas')`` on real hardware
+  ref.py    — naive pure-jnp oracle used by the allclose test sweeps
+
+Kernels: flash_attention (prefill), decode_attention (GQA single-token),
+mamba2_ssd (chunked state-space dual), rwkv6_wkv (data-dependent-decay
+linear attention), agreement (ABC's ensemble vote/score reduce).
+"""
+from repro.kernels import config
+
+__all__ = ["config"]

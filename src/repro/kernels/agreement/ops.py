@@ -1,0 +1,50 @@
+"""Dispatching wrapper for the ABC agreement reduce.
+
+``agreement(logits)`` with logits (E, B, V) returns
+``{'pred', 'vote_frac', 'mean_score'}`` per example — the inputs to the
+paper's deferral rules r_v (Eq. 3) and r_s (Eq. 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+
+
+def _epilogue(logits, m, idx, l):
+    """Majority vote + mean majority-class probability from member stats.
+    m/idx/l: (E, B).  O(E²·B) — tiny next to the V sweep."""
+    E, _, V = logits.shape
+    votes = (idx[:, None, :] == idx[None, :, :]).sum(axis=0)  # (E, B)
+    # canonical tie-break: max votes, then smallest class id
+    vmax = jnp.max(votes, axis=0, keepdims=True)
+    pred = jnp.min(jnp.where(votes == vmax, idx, jnp.int32(2**30)), axis=0)
+    vote_frac = vmax[0].astype(jnp.float32) / E
+    # each member's probability for the majority class: one gather over V
+    lm = jnp.take_along_axis(
+        logits.astype(jnp.float32), pred[None, :, None], axis=2
+    )[..., 0]  # (E, B)
+    p_maj = jnp.exp(lm - m) / l
+    return {"pred": pred, "vote_frac": vote_frac, "mean_score": p_maj.mean(axis=0)}
+
+
+def _xla_member_stats(logits):
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1)
+    idx = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    l = jnp.sum(jnp.exp(lf - m[..., None]), axis=-1)
+    return m, idx, l
+
+
+def agreement(logits: jax.Array):
+    impl = kcfg.get_impl()
+    if impl == "xla":
+        m, idx, l = _xla_member_stats(logits)
+    else:
+        from repro.kernels.agreement import kernel as _kernel
+
+        m, idx, l = _kernel.member_stats_pallas(
+            logits, interpret=(impl == "pallas_interpret")
+        )
+    return _epilogue(logits, m, idx, l)

@@ -1,0 +1,27 @@
+"""Naive oracle for the ABC agreement reduce.
+
+Given ensemble logits (E, B, V) compute, per example b:
+  pred[b]        majority top-1 class across the E members
+  vote_frac[b]   fraction of members voting for pred[b]   (paper Eq. 3)
+  mean_score[b]  mean over members of softmax_e(logits)[pred[b]] (Eq. 4)
+Vote ties break toward the smallest class id (member-permutation invariant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def agreement_ref(logits: jax.Array):
+    E, B, V = logits.shape
+    lf = logits.astype(jnp.float32)
+    top1 = jnp.argmax(lf, axis=-1).astype(jnp.int32)  # (E, B)
+    votes = (top1[:, None, :] == top1[None, :, :]).sum(axis=0)  # (E, B)
+    # canonical tie-break: max votes, then smallest class id
+    vmax = jnp.max(votes, axis=0, keepdims=True)
+    pred = jnp.min(jnp.where(votes == vmax, top1, jnp.int32(2**30)), axis=0)
+    vote_frac = vmax[0].astype(jnp.float32) / E
+    probs = jax.nn.softmax(lf, axis=-1)  # (E, B, V)
+    p_maj = jnp.take_along_axis(probs, pred[None, :, None], axis=2)[..., 0]  # (E, B)
+    mean_score = p_maj.mean(axis=0)
+    return {"pred": pred, "vote_frac": vote_frac, "mean_score": mean_score}

@@ -1,0 +1,47 @@
+"""Kernel implementation selector.
+
+impl = 'xla'               chunked pure-jnp path (default; what the
+                           multi-device dry-run lowers, since this container
+                           compiles for CPU and the Pallas kernels target TPU)
+impl = 'pallas_interpret'  Pallas kernel body executed in Python on CPU —
+                           used by the correctness test sweeps
+impl = 'pallas'            real TPU lowering (target hardware)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_VALID = ("xla", "pallas", "pallas_interpret")
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.impl = "xla"
+
+
+_STATE = _State()
+
+
+def get_impl() -> str:
+    return _STATE.impl
+
+
+def set_impl(impl: str) -> None:
+    assert impl in _VALID, impl
+    _STATE.impl = impl
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    prev = _STATE.impl
+    set_impl(impl)
+    try:
+        yield
+    finally:
+        set_impl(prev)
+
+
+def pallas_kwargs() -> dict:
+    """kwargs forwarded to pl.pallas_call depending on the selected impl."""
+    return {"interpret": get_impl() == "pallas_interpret"}

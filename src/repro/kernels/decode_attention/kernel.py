@@ -1,0 +1,147 @@
+"""GQA decode attention — Pallas TPU kernel.
+
+One query token per sequence attends over a long KV cache.  The cache is
+streamed through VMEM in (block_k × hd) tiles along the sequential grid
+dimension; online-softmax accumulators live in VMEM scratch.  All G query
+heads of a KV head are processed together, so the logits matmul is
+(G × hd) @ (hd × block_k) — G·hd and block_k are the MXU dims (hd ∈ {64,128},
+block_k a multiple of 512).
+
+``cur_len`` is a runtime scalar (how much of the cache is valid) delivered
+via scalar prefetch (SMEM) so the mask needs no recompilation per step, and
+blocks entirely past ``cur_len`` (or before the sliding window) are skipped
+with ``pl.when`` — the sweep cost is O(cur_len), or O(window) with SWA.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,  # scalar prefetch: (B,) int32  valid cache length per sequence
+    q_ref,  # (1, 1, G, hd)
+    k_ref,  # (1, 1, block_k, hd)
+    v_ref,  # (1, 1, block_k, hd)
+    o_ref,  # (1, 1, G, hd)
+    m_scr,  # (G, 1) f32
+    l_scr,  # (G, 1) f32
+    acc_scr,  # (G, hd) f32
+    *,
+    scale: float,
+    window: Optional[int],
+    softcap: Optional[float],
+    block_k: int,
+    num_k_blocks: int,
+):
+    ik = pl.program_id(2)
+    cur_len = len_ref[pl.program_id(0)]  # per-sequence (continuous batching)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ik * block_k
+    relevant = k_start < cur_len
+    if window is not None:
+        relevant = jnp.logical_and(relevant, k_start + block_k > cur_len - window)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, block_k)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < cur_len
+        if window is not None:
+            mask = jnp.logical_and(mask, cols >= cur_len - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_k", "interpret"),
+)
+def decode_attention_bkgd(
+    q: jax.Array,  # (B, KVH, G, hd)
+    k_cache: jax.Array,  # (B, KVH, S, hd)
+    v_cache: jax.Array,
+    cur_len: jax.Array,  # scalar int32
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KVH, G, hd = q.shape
+    S = k_cache.shape[2]
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(
+        _decode_kernel,
+        scale=scale,
+        window=window,
+        softcap=softcap,
+        block_k=block_k,
+        num_k_blocks=nk,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KVH, nk),
+        # index_maps receive the scalar-prefetch ref as a trailing argument
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, lens: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, lens: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lens, q, k_cache, v_cache)

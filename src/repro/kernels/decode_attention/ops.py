@@ -1,0 +1,117 @@
+"""Dispatching wrapper for decode attention.
+
+``decode_attention(q, k_cache, v_cache, cur_len)`` — q (B, 1, H, hd),
+caches (B, S, KVH, hd), cur_len a (traced) scalar count of valid positions.
+
+impl='xla': masked full-cache sweep — linear in S, shardable; the KV-cache
+sequence dim carries the 'kv_seq' logical axis so GSPMD keeps the sweep
+distributed (partial softmax + all-reduce over the sharded seq axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+from repro.kernels.decode_attention import kernel as _kernel
+
+
+def _xla_decode(q, k_cache, v_cache, cur_len, *, window, softcap):
+    B, _, H, hd = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KVH, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    cols = jnp.arange(S)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len), (B,))
+    mask = cols[None, :] < cur[:, None]  # (B, S); supports per-sequence lens
+    if window is not None:
+        mask &= cols[None, :] >= (cur - window)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    impl = kcfg.get_impl()
+    if impl == "xla":
+        return _xla_decode(
+            q, k_cache, v_cache, cur_len, window=window, softcap=softcap
+        )
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B, KVH, S, hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    return decode_attention_bksd(
+        q, kt, vt, cur_len=cur_len, window=window, softcap=softcap
+    )
+
+
+def _xla_decode_bksd(q, k_cache, v_cache, cur_len, *, window, softcap):
+    B, _, H, hd = q.shape
+    KVH, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KVH, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    cols = jnp.arange(S)
+    cur = jnp.asarray(cur_len)
+    if cur.ndim == 0:  # scalar: shared position
+        mask = (cols < cur)[None, :]
+    else:  # (B,): per-slot positions (continuous batching)
+        mask = cols[None, :] < cur[:, None]
+    if window is not None:
+        lo = (cur - window)[..., None] if cur.ndim else cur - window
+        mask = mask & (cols[None, :] >= lo)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def decode_attention_bksd(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, KVH, S, hd)  kernel-native layout
+    v_cache: jax.Array,
+    cur_len,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention over caches stored sequence-innermost — the layout
+    the Pallas kernel streams directly, so no per-step transpose of the full
+    cache exists on any path (§Perf iteration 1)."""
+    impl = kcfg.get_impl()
+    if impl == "xla":
+        return _xla_decode_bksd(
+            q, k_cache, v_cache, cur_len, window=window, softcap=softcap
+        )
+    B, _, H, hd = q.shape
+    KVH = k_cache.shape[1]
+    G = H // KVH
+    qk = q.reshape(B, KVH, G, hd)
+    out = _kernel.decode_attention_bkgd(
+        qk,
+        k_cache,
+        v_cache,
+        jnp.asarray(cur_len, jnp.int32),
+        window=window,
+        softcap=softcap,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,37 @@
+"""Naive pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S, KVH, hd)
+    v_cache: jax.Array,
+    cur_len,  # scalar: number of valid cache positions
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, _, H, hd = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    kf = jnp.repeat(k_cache.astype(jnp.float32), G, axis=2)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)  # (B, H, 1, S)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    cols = jnp.arange(S)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len), (B,))
+    mask = cols[None, :] < cur[:, None]  # (B, S); supports per-sequence lens
+    if window is not None:
+        mask &= cols[None, :] >= (cur - window)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,177 @@
+"""Flash attention (prefill) — Pallas TPU kernel.
+
+Layout: q (B, H, Sq, hd), k/v (B, KVH, Sk, hd); GQA handled in the k/v
+index_map (`h // group`) so grouped heads stream the same KV block from HBM
+once per q-head — no expanded KV is ever materialized.
+
+Tiling: (block_q × hd) query tile and (block_k × hd) KV tile live in VMEM;
+the running max / denominator / accumulator live in VMEM scratch across the
+sequential k-block grid dimension (online softmax).  block sizes default to
+256×512 with hd in {64, 128} — MXU-aligned (multiples of 128 on the matmul
+dims) and < 4 MiB of VMEM working set per core.
+
+Supports: causal masking, sliding-window masking, logit soft-capping and
+bidirectional (encoder) attention.  Fully-masked k-blocks are skipped with
+``pl.when`` (structural work-skipping — this is where the sliding-window
+sub-quadratic behaviour comes from).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Structural block skipping: causal blocks strictly above the diagonal
+    # and blocks entirely left of the sliding window contribute nothing.
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant = jnp.logical_and(relevant, k_start <= q_start + block_q - 1)
+    if window is not None:
+        # newest k position needed for the oldest q row in this tile
+        relevant = jnp.logical_and(
+            relevant, k_start + block_k - 1 >= q_start - (window - 1)
+        )
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (block_q, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)  # (block_k, hd)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (block_q, block_k)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.bool_(True)
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window is not None:
+            mask = jnp.logical_and(mask, rows - cols < window)
+        if causal or window is not None:
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (block_q, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # (block_q, block_k)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # rows with no valid k (padding only)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention_bhsd(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, KVH, Sk, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    _, KVH, Sk, _ = k.shape
+    group = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+    )
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

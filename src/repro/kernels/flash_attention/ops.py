@@ -1,0 +1,199 @@
+"""Dispatching wrapper for flash attention.
+
+``flash_attention(q, k, v)`` with q (B, Sq, H, hd), kv (B, Sk, KVH, hd).
+
+impl='xla' (default): chunked-softmax pure-jnp path — scan over query blocks
+so peak memory is O(block_q · Sk) not O(Sq · Sk), and with a sliding window
+the KV is dynamically sliced to O(window + block_q) per block, making SWA
+prefill genuinely sub-quadratic.  This is the path the 512-device dry-run
+lowers; GSPMD shards it like any einsum.
+
+impl='pallas[_interpret]': the TPU kernel in kernel.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+from repro.kernels.flash_attention import kernel as _kernel
+
+
+def _xla_flash(
+    q, k, v, *, causal, window, softcap, q_offset=0, block_q: int = 512,
+    return_lse: bool = False,
+):
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, Sq)
+    assert Sq % block_q == 0, (Sq, block_q)
+    nq = Sq // block_q
+
+    if window is not None:
+        kv_len = min(Sk, window + block_q)
+    else:
+        kv_len = Sk
+
+    qb = q.reshape(B, nq, block_q, KVH, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, inp):
+        iq, qblk = inp  # qblk: (B, bq, KVH, G, hd)
+        q_start = iq * block_q + q_offset
+        if window is not None and kv_len < Sk:
+            start = jnp.clip(q_start - (window - 1), 0, Sk - kv_len)
+        else:
+            start = jnp.int32(0)
+        k_sl = jax.lax.dynamic_slice_in_dim(k, start, kv_len, axis=1)
+        v_sl = jax.lax.dynamic_slice_in_dim(v, start, kv_len, axis=1)
+        s = jnp.einsum(
+            "bqkgd,bskd->bkgqs",
+            qblk.astype(jnp.float32) * scale,
+            k_sl.astype(jnp.float32),
+        )
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = q_start + jnp.arange(block_q)[:, None]
+        cols = start + jnp.arange(kv_len)[None, :]
+        mask = jnp.ones((block_q, kv_len), bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= (rows - cols) < window
+        if causal or window is not None:
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, v_sl.astype(jnp.float32))
+        lse = jax.nn.logsumexp(s, axis=-1)  # (B, KVH, G, bq)
+        return None, (o.astype(q.dtype), lse)
+
+    _, (ob, lseb) = jax.lax.scan(body, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    if return_lse:
+        # (nq, B, KVH, G, bq) -> (B, Sq, H)
+        lse = lseb.transpose(1, 0, 4, 2, 3).reshape(B, Sq, H)
+        return out, lse
+    return out
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp: flash-style chunked backward (O(block_q · Sk) memory — the
+# (Sq × Sk) probability matrix is never materialized in either direction)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_diff(q, k, v, causal, window, softcap):
+    return _xla_flash(q, k, v, causal=causal, window=window, softcap=softcap)
+
+
+def _flash_diff_fwd(q, k, v, causal, window, softcap):
+    out, lse = _xla_flash(
+        q, k, v, causal=causal, window=window, softcap=softcap, return_lse=True
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _flash_diff_bwd(causal, window, softcap, res, do):
+    """Chunked over q blocks; dk/dv accumulate in the scan carry.  Backward
+    recomputes each block's logits from (q, k, lse) — the flash recipe."""
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(512, Sq)
+    nq = Sq // block_q
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # D_i = dO_i · O_i  (B, Sq, H)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    def reshape_q(a, last):
+        return a.reshape(B, nq, block_q, KVH, G, last).transpose(1, 0, 2, 3, 4, 5)
+
+    qb = reshape_q(q.astype(jnp.float32), hd)
+    dob = reshape_q(do.astype(jnp.float32), hd)
+    deltab = delta.reshape(B, nq, block_q, KVH, G).transpose(1, 0, 2, 3, 4)
+    lseb = lse.reshape(B, nq, block_q, KVH, G).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        dk, dv = carry
+        iq, qblk, doblk, dblk, lblk = inp
+        q_start = iq * block_q
+        s_raw = jnp.einsum("bqkgd,bskd->bkgqs", qblk * scale, kf)
+        if softcap is not None:
+            t = jnp.tanh(s_raw / softcap)
+            s = softcap * t
+            dcap = 1.0 - jnp.square(t)
+        else:
+            s = s_raw
+            dcap = None
+        rows = q_start + jnp.arange(block_q)[:, None]
+        cols = jnp.arange(Sk)[None, :]
+        mask = jnp.ones((block_q, Sk), bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= (rows - cols) < window
+        if causal or window is not None:
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        # P_ij = exp(s_ij - lse_i)
+        p = jnp.exp(s - lblk.transpose(0, 2, 3, 1)[..., None])  # (B,K,G,bq,Sk)
+        dvb = jnp.einsum("bkgqs,bqkgd->bskd", p, doblk)
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", doblk, vf)
+        ds = p * (dp - dblk.transpose(0, 2, 3, 1)[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        dqb = jnp.einsum("bkgqs,bskd->bqkgd", ds, kf) * scale
+        dkb = jnp.einsum("bkgqs,bqkgd->bskd", ds, qblk) * scale
+        return (dk + dkb, dv + dvb), dqb
+
+    zeros = jnp.zeros((B, Sk, KVH, hd), jnp.float32)
+    (dk, dv), dqb = jax.lax.scan(
+        body, (zeros, zeros), (jnp.arange(nq), qb, dob, deltab, lseb)
+    )
+    dq = dqb.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_diff.defvjp(_flash_diff_fwd, _flash_diff_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    impl = kcfg.get_impl()
+    if impl == "xla":
+        if q_offset == 0:
+            return _flash_diff(q, k, v, causal, window, softcap)
+        return _xla_flash(
+            q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
+        )
+    assert q_offset == 0, "pallas path assumes q starts at position 0"
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, S, hd)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _kernel.flash_attention_bhsd(
+        qt,
+        kt,
+        vt,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,3 @@
+from repro.kernels.mamba2_ssd import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

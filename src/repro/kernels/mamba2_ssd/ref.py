@@ -1,0 +1,73 @@
+"""Naive per-step recurrence oracle for the Mamba2 SSD.
+
+Recurrence (per batch b, head h):
+    a_t = exp(A_h * dt_t)                                (scalar decay)
+    H_t = a_t * H_{t-1} + dt_t * B_t x_t^T               (H: N x P)
+    y_t = C_t^T H_t                                      (P,)
+with B_t, C_t in R^N shared across the heads of a group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)   positive step sizes
+    A: jax.Array,  # (H,)        negative
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    *,
+    initial_state=None,  # (B, H, N, P)
+    return_final_state: bool = False,
+):
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)  # (B, S, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+    Af = A.astype(jnp.float32)
+
+    h0 = (
+        jnp.zeros((B, H, N, P), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        a = jnp.exp(Af[None] * dtt)  # (B,H)
+        h = h * a[..., None, None] + jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    xs = (
+        xf.transpose(1, 0, 2, 3),
+        dtf.transpose(1, 0, 2),
+        Bf.transpose(1, 0, 2, 3),
+        Cf.transpose(1, 0, 2, 3),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)  # (B, S, H, P)
+    if return_final_state:
+        return y, hT
+    return y
+
+
+def ssd_step_ref(x, dt, A, Bm, Cm, state):
+    """Single decode step. x (B,H,P), dt (B,H), Bm/Cm (B,G,N),
+    state (B,H,N,P) -> (y, new_state)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    a = jnp.exp(A.astype(jnp.float32)[None] * dt.astype(jnp.float32))
+    new = state * a[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bf, x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, new)
+    return y.astype(x.dtype), new

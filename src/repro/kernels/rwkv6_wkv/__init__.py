@@ -1,0 +1,3 @@
+from repro.kernels.rwkv6_wkv import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

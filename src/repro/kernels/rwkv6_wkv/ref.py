@@ -1,0 +1,59 @@
+"""Naive per-step recurrence oracle for RWKV6 (Finch) WKV.
+
+Per head with channel dim D (state S: D_k x D_v):
+    y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+with data-dependent per-channel decay w_t = exp(-exp(logw_t)) ∈ (0,1);
+inputs carry logw directly as log(w_t) <= 0 for numerical clarity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, H, D)
+    v: jax.Array,  # (B, S, H, D)
+    logw: jax.Array,  # (B, S, H, D)  log decay, <= 0
+    u: jax.Array,  # (H, D) bonus
+    *,
+    initial_state=None,  # (B, H, D, D)  [key, value]
+    return_final_state: bool = False,
+):
+    B, S, H, D = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    s0 = (
+        jnp.zeros((B, H, D, D), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,D)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + uf[None, :, :, None] * kv)
+        s = s * wt[..., :, None] + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3).astype(r.dtype)
+    if return_final_state:
+        return y, sT
+    return y
+
+
+def wkv6_step_ref(r, k, v, logw, u, state):
+    """Single decode step: all (B, H, D); state (B, H, D, D)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+    kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+    y = jnp.einsum("bhi,bhij->bhj", rf, state + uf[None, :, :, None] * kv)
+    new = state * wf[..., :, None] + kv
+    return y.astype(r.dtype), new

@@ -1,0 +1,1 @@
+# launch/: mesh construction, multi-pod dry-run, training and serving CLIs.

@@ -1,0 +1,182 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+memory term     = HLO_bytes / (chips × HBM_bw)
+collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes is parsed from the (post-SPMD-partitioning) HLO text:
+we sum the *output* shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op — i.e. bytes landed per
+participating device, the quantity the ICI links must move.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import numpy as np
+
+from repro.core.cost_model import TPU_V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(bf16|f8e4m3fn|f8e5m2|f64|f32|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_collective(line: str):
+    """(kind, bytes) for a collective op line, else None."""
+    s = line.strip()
+    if "=" not in s:
+        return None
+    lhs, rhs = s.split("=", 1)
+    rhs = rhs.strip()
+    m = re.match(r"^(\([^)]*\)|[a-z0-9\[\],{}_:\- ]+?)\s+([a-z0-9\-]+)\(", rhs)
+    if not m:
+        return None
+    op = m.group(2)
+    base = op[:-6] if op.endswith("-start") else op
+    if base not in _COLLECTIVES or op.endswith("-done"):
+        return None
+    total = sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(m.group(1)))
+    return base, total
+
+
+_CALLEE_RE = re.compile(
+    r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)|branch_computations=\{([^}]*)\}"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind, multiplying collectives inside
+    ``while`` bodies by the loop trip count (scan-over-layers!).  Trip count
+    is recovered from the largest integer constant in the loop's condition
+    computation — exact for lax.scan's counted loops."""
+    # 1. split into computations
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+                continue
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+
+    const_re = re.compile(r"constant\((\d+)\)")
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in const_re.findall(line):
+                best = max(best, int(c))
+        return best
+
+    # 2. per-computation direct bytes + callees
+    direct: Dict[str, Dict[str, int]] = {}
+    callees: Dict[str, list] = {}
+    for name, lines in comps.items():
+        d = {k: 0 for k in _COLLECTIVES}
+        cl = []
+        for line in lines:
+            r = _line_collective(line)
+            if r:
+                d[r[0]] += r[1]
+            if "while(" in line:
+                body = cond = None
+                for m in _CALLEE_RE.finditer(line):
+                    pass
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                if bm:
+                    cl.append((bm.group(1), trip_count(cm.group(1)) if cm else 1))
+            else:
+                for m in _CALLEE_RE.finditer(line):
+                    if m.group(1) and "condition=" not in m.group(0):
+                        cl.append((m.group(1), 1))
+                    elif m.group(2):
+                        for b in m.group(2).split(","):
+                            b = b.strip().lstrip("%")
+                            if b:
+                                cl.append((b, 1))
+        direct[name] = d
+        callees[name] = cl
+
+    # 3. DFS with multipliers (memoized per computation)
+    memo: Dict[str, Dict[str, int]] = {}
+
+    def total(name: str) -> Dict[str, int]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {k: 0 for k in _COLLECTIVES}  # cycle guard
+        acc = dict(direct.get(name, {k: 0 for k in _COLLECTIVES}))
+        for callee, mult in callees.get(name, []):
+            sub = total(callee)
+            for k in _COLLECTIVES:
+                acc[k] += mult * sub[k]
+        memo[name] = acc
+        return acc
+
+    if entry is None:
+        return {k: 0 for k in _COLLECTIVES}
+    return total(entry)
+
+
+def roofline_terms(
+    cost: dict,
+    collective_bytes: int,
+    n_chips: int,
+    hw: dict = TPU_V5E,
+) -> dict:
+    """cost: compiled.cost_analysis() dict (per-device program).
+
+    Note: on this container XLA:CPU reports whole-program FLOPs of the
+    SPMD-partitioned per-device program, so terms are already per-chip.
+    """
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = byts / hw["hbm_bw"]
+    t_collective = collective_bytes / n_chips / hw["ici_bw"]
+    terms = {
+        "flops": flops,
+        "bytes": byts,
+        "collective_bytes": collective_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+    }
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )
+    terms["bottleneck"] = dom[0]
+    terms["t_bound_s"] = dom[1]
+    return terms

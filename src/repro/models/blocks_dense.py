@@ -1,0 +1,82 @@
+"""Transformer layer (dense / MoE / encoder flavors) with train + decode paths."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import Initializer
+from repro.sharding.logical import constrain
+
+
+def init_dense_layer(ini: Initializer, cfg: ModelConfig, *, moe: bool):
+    p = {
+        "ln1": L.init_norm(ini, cfg, cfg.d_model),
+        "attn": L.init_attention(ini, cfg),
+        "ln2": L.init_norm(ini, cfg, cfg.d_model),
+    }
+    if moe:
+        p["moe"] = L.init_moe(ini, cfg)
+    else:
+        p["mlp"] = L.init_mlp(ini, cfg)
+    return p
+
+
+def dense_layer_fwd(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    positions=None,
+):
+    """Full-sequence forward.  Returns (x, aux_loss, (k, v))."""
+    h, kv = L.attention_layer(
+        p["attn"],
+        L.apply_norm(p["ln1"], x, cfg),
+        cfg,
+        causal=causal,
+        positions=positions,
+        sliding_window=sliding_window,
+    )
+    x = x + h
+    aux = jnp.float32(0.0)
+    if "moe" in p:
+        h, aux = L.apply_moe(p["moe"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    else:
+        h = L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    x = x + h
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, aux, kv
+
+
+def dense_layer_decode(
+    p,
+    x,
+    cfg: ModelConfig,
+    k_cache,
+    v_cache,
+    cur_index,
+    *,
+    sliding_window: Optional[int] = None,
+):
+    """Single-token decode.  x: (B, 1, D).  Returns (x, (k_cache, v_cache))."""
+    h, caches = L.attention_decode(
+        p["attn"],
+        L.apply_norm(p["ln1"], x, cfg),
+        cfg,
+        k_cache,
+        v_cache,
+        cur_index,
+        sliding_window=sliding_window,
+    )
+    x = x + h
+    if "moe" in p:
+        h, _ = L.apply_moe(p["moe"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    else:
+        h = L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    return x + h, caches

@@ -1,0 +1,136 @@
+"""Mamba2 block (Zamba2's SSM backbone) with train + decode paths.
+
+in_proj -> [z | x | B | C | dt]; causal depthwise conv over [x|B|C];
+y = SSD(x·dt, A·dt, B, C) + D·x;  out = out_proj(RMSNorm(y · silu(z))).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.mamba2_ssd import ops as ssd_ops
+from repro.models.params import Initializer
+from repro.sharding.logical import constrain
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    nh = cfg.ssm_nheads
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    proj_dim = 2 * d_in + 2 * G * N + nh
+    return d_in, nh, G, N, conv_dim, proj_dim
+
+
+def init_mamba2_block(ini: Initializer, cfg: ModelConfig):
+    d_in, nh, G, N, conv_dim, proj_dim = _dims(cfg)
+    return {
+        "in_proj": ini.normal((cfg.d_model, proj_dim), ("embed", "ssm_inner")),
+        "conv_w": ini.normal((cfg.ssm_conv, conv_dim), ("conv_kernel", "ssm_inner"), std=0.5),
+        "conv_b": ini.zeros((conv_dim,), ("ssm_inner",)),
+        "A_log": ini.const(jnp.log(jnp.linspace(1.0, 16.0, nh)), ("ssm_heads",), dtype=jnp.float32),
+        "D": ini.ones((nh,), ("ssm_heads",), dtype=jnp.float32),
+        "dt_bias": ini.const(jnp.log(jnp.expm1(jnp.full((nh,), 1e-2))), ("ssm_heads",), dtype=jnp.float32),
+        "norm": ini.ones((d_in,), ("ssm_inner",), dtype=jnp.float32),
+        "out_proj": ini.normal((d_in, cfg.d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_in, nh, G, N, _, _ = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_in, d_in + d_in + 2 * G * N], axis=-1)
+    return z, xBC, dt  # dt: (..., nh)
+
+
+def _gated_out(p, y, z, cfg: ModelConfig):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm"]).astype(y.dtype)
+    return g @ p["out_proj"]
+
+
+def mamba2_fwd(p, x, cfg: ModelConfig, *, initial=None, return_state: bool = False):
+    """Full-sequence forward.  x: (B, S, D).
+    initial: optional dict(conv=(B, K-1, conv_dim), ssm=(B, nh, N, hd))."""
+    B, S, D = x.shape
+    d_in, nh, G, N, conv_dim, _ = _dims(cfg)
+    K = cfg.ssm_conv
+
+    proj = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(proj, cfg)
+
+    # causal depthwise conv over the sequence
+    prev = (
+        jnp.zeros((B, K - 1, conv_dim), xBC.dtype)
+        if initial is None
+        else initial["conv"].astype(xBC.dtype)
+    )
+    padded = jnp.concatenate([prev, xBC], axis=1)
+    conv = sum(
+        padded[:, i : i + S, :].astype(jnp.float32)
+        * p["conv_w"][i][None, None, :].astype(jnp.float32)
+        for i in range(K)
+    ).astype(xBC.dtype)
+    xBC = jax.nn.silu(conv + p["conv_b"])
+    conv_state = padded[:, S:, :] if K > 1 else prev
+
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, S, nh, cfg.ssm_head_dim)
+    xs = constrain(xs, ("act_batch", "act_seq", "act_heads", "act_head_dim"))
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])
+
+    ssm0 = None if initial is None else initial["ssm"]
+    y, ssm_state = ssd_ops.ssd(
+        xs, dt, A, Bm, Cm, initial_state=ssm0, return_final_state=True
+    )
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    out = _gated_out(p, y, z, cfg)
+    out = constrain(out, ("act_batch", "act_seq", "act_embed"))
+    if return_state:
+        return out, {"conv": conv_state, "ssm": ssm_state}
+    return out
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, nh, G, N, conv_dim, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, N, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba2_step(p, x, cfg: ModelConfig, state):
+    """Single-token decode.  x: (B, 1, D) -> (out (B,1,D), new_state)."""
+    B = x.shape[0]
+    d_in, nh, G, N, conv_dim, _ = _dims(cfg)
+    K = cfg.ssm_conv
+
+    proj = x[:, 0] @ p["in_proj"]  # (B, proj_dim)
+    z, xBC, dt = _split_proj(proj, cfg)
+
+    window = jnp.concatenate(
+        [state["conv"].astype(xBC.dtype), xBC[:, None, :]], axis=1
+    )  # (B, K, conv_dim)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(jnp.float32)).astype(
+        xBC.dtype
+    )
+    xBC = jax.nn.silu(conv + p["conv_b"])
+    new_conv = window[:, 1:, :]
+
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, nh, cfg.ssm_head_dim)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+
+    y, ssm = ssd_ops.ssd_step(xs, dt, A, Bm, Cm, state["ssm"])
+    y = y + xs * p["D"][None, :, None]
+    out = _gated_out(p, y.reshape(B, d_in).astype(x.dtype), z, cfg)
+    return out[:, None, :], {"conv": new_conv, "ssm": ssm}

@@ -1,0 +1,184 @@
+"""RWKV6 (Finch) block: data-dependent-decay time mix + channel mix.
+
+Faithful structure: token-shift ddlerp with a shared low-rank adapter for
+the five mix coefficients (r,k,v,w,g), a LoRA'd data-dependent per-channel
+decay, the WKV recurrence (kernels/rwkv6_wkv), per-head GroupNorm, and the
+squared-ReLU channel mix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.rwkv6_wkv import ops as wkv_ops
+from repro.models.params import Initializer
+from repro.sharding.logical import constrain
+
+_MIX = 5  # r, k, v, w, g
+
+
+def init_rwkv6_block(ini: Initializer, cfg: ModelConfig):
+    D = cfg.d_model
+    R = cfg.rwkv_lora_rank
+    H = D // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    return {
+        "ln1": {"scale": ini.ones((D,), ("norm",), dtype=jnp.float32),
+                "bias": ini.zeros((D,), ("norm",), dtype=jnp.float32)},
+        "ln2": {"scale": ini.ones((D,), ("norm",), dtype=jnp.float32),
+                "bias": ini.zeros((D,), ("norm",), dtype=jnp.float32)},
+        "tm": {
+            "mu_base": ini.zeros((D,), ("embed",)),
+            "mu": ini.normal((_MIX, D), (None, "embed"), std=0.2),
+            "lora_w1": ini.normal((D, _MIX * R), ("embed", "rwkv_lora")),
+            "lora_w2": ini.normal((_MIX, R, D), (None, "rwkv_lora", "embed"), std=0.01),
+            "wr": ini.normal((D, D), ("embed", "mlp")),
+            "wk": ini.normal((D, D), ("embed", "mlp")),
+            "wv": ini.normal((D, D), ("embed", "mlp")),
+            "wg": ini.normal((D, D), ("embed", "mlp")),
+            "wo": ini.normal((D, D), ("mlp", "embed")),
+            "decay_base": ini.const(jnp.full((D,), -6.0), ("embed",), dtype=jnp.float32),
+            "decay_w1": ini.normal((D, R), ("embed", "rwkv_lora")),
+            "decay_w2": ini.normal((R, D), ("rwkv_lora", "embed"), std=0.01),
+            "u": ini.normal((H, hd), ("ssm_heads", "head_dim"), std=0.5),
+            "gn_scale": ini.ones((D,), ("norm",), dtype=jnp.float32),
+            "gn_bias": ini.zeros((D,), ("norm",), dtype=jnp.float32),
+        },
+        "cm": {
+            "mu_k": ini.normal((D,), ("embed",), std=0.2),
+            "mu_r": ini.normal((D,), ("embed",), std=0.2),
+            "wk": ini.normal((D, cfg.d_ff), ("embed", "mlp")),
+            "wv": ini.normal((cfg.d_ff, D), ("mlp", "embed")),
+            "wr": ini.normal((D, D), ("embed", "mlp")),
+        },
+    }
+
+
+def _ln(p, x, eps):
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return ((xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(
+        x.dtype
+    )
+
+
+def _group_norm(tm, y, H, hd, eps):
+    """Per-head LayerNorm (RWKV's GroupNorm with groups=H)."""
+    B, S, D = y.shape
+    yf = y.astype(jnp.float32).reshape(B, S, H, hd)
+    mean = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mean) * jax.lax.rsqrt(var + eps)
+    return (yf.reshape(B, S, D) * tm["gn_scale"] + tm["gn_bias"]).astype(y.dtype)
+
+
+def _ddlerp(tm, x, delta):
+    """Data-dependent lerp for the five mix channels.  Returns (B,S,5,D)."""
+    base = x + delta * tm["mu_base"]
+    lora = jnp.tanh(base @ tm["lora_w1"])  # (B,S,5R)
+    B_, S_, _ = lora.shape
+    lora = lora.reshape(B_, S_, _MIX, -1)
+    adj = jnp.einsum("bsmr,mrd->bsmd", lora, tm["lora_w2"])
+    mix = tm["mu"][None, None] + adj  # (B,S,5,D)
+    return x[:, :, None, :] + delta[:, :, None, :] * mix
+
+
+def time_mix(tm, x, cfg: ModelConfig, *, prev_x=None, wkv_state=None, return_state=False):
+    """x: (B,S,D).  prev_x: (B,D) carried shift token (zeros at seq start)."""
+    B, S, D = x.shape
+    H, hd = D // cfg.ssm_head_dim, cfg.ssm_head_dim
+    if prev_x is None:
+        prev_x = jnp.zeros((B, D), x.dtype)
+    shifted = jnp.concatenate([prev_x[:, None, :], x[:, :-1, :]], axis=1)
+    delta = shifted - x
+
+    mixed = _ddlerp(tm, x, delta)  # (B,S,5,D)
+    xr, xk, xv, xw, xg = (mixed[:, :, i, :] for i in range(_MIX))
+    r = (xr @ tm["wr"]).reshape(B, S, H, hd)
+    k = (xk @ tm["wk"]).reshape(B, S, H, hd)
+    v = (xv @ tm["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ tm["wg"])
+    logw = -jnp.exp(
+        tm["decay_base"] + jnp.tanh(xw.astype(jnp.float32) @ tm["decay_w1"].astype(jnp.float32)) @ tm["decay_w2"].astype(jnp.float32)
+    )  # (B,S,D) <= 0
+    logw = logw.reshape(B, S, H, hd)
+    r = constrain(r, ("act_batch", "act_seq", "act_heads", "act_head_dim"))
+    k = constrain(k, ("act_batch", "act_seq", "act_heads", "act_head_dim"))
+
+    y, sT = wkv_ops.wkv6(
+        r, k, v, logw, tm["u"], initial_state=wkv_state, return_final_state=True
+    )
+    y = _group_norm(tm, y.reshape(B, S, D), H, hd, cfg.norm_eps)
+    out = (y * g) @ tm["wo"]
+    if return_state:
+        return out, (x[:, -1, :], sT)
+    return out
+
+
+def channel_mix(cm, x, *, prev_x=None, return_state=False):
+    B, S, D = x.shape
+    if prev_x is None:
+        prev_x = jnp.zeros((B, D), x.dtype)
+    shifted = jnp.concatenate([prev_x[:, None, :], x[:, :-1, :]], axis=1)
+    delta = shifted - x
+    xk = x + delta * cm["mu_k"]
+    xr = x + delta * cm["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+    k = constrain(k, ("act_batch", "act_seq", "act_mlp"))
+    out = jax.nn.sigmoid(xr @ cm["wr"]) * (k @ cm["wv"])
+    if return_state:
+        return out, x[:, -1, :]
+    return out
+
+
+def rwkv6_layer_fwd(p, x, cfg: ModelConfig, *, state=None, return_state=False):
+    """state: dict(tm_x (B,D), cm_x (B,D), wkv (B,H,hd,hd)) or None."""
+    tm_prev = None if state is None else state["tm_x"]
+    cm_prev = None if state is None else state["cm_x"]
+    wkv_prev = None if state is None else state["wkv"]
+    if return_state:
+        h, (tm_x, wkv) = time_mix(
+            p["tm"], _ln(p["ln1"], x, cfg.norm_eps), cfg,
+            prev_x=tm_prev, wkv_state=wkv_prev, return_state=True,
+        )
+        x = x + h
+        h, cm_x = channel_mix(
+            p["cm"], _ln(p["ln2"], x, cfg.norm_eps), prev_x=cm_prev, return_state=True
+        )
+        x = x + h
+        return x, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+    h = time_mix(
+        p["tm"], _ln(p["ln1"], x, cfg.norm_eps), cfg,
+        prev_x=tm_prev, wkv_state=wkv_prev,
+    )
+    x = x + h
+    x = x + channel_mix(p["cm"], _ln(p["ln2"], x, cfg.norm_eps), prev_x=cm_prev)
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype):
+    D = cfg.d_model
+    H, hd = D // cfg.ssm_head_dim, cfg.ssm_head_dim
+    return {
+        "tm_x": jnp.zeros((batch, D), dtype),
+        "cm_x": jnp.zeros((batch, D), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def rwkv6_step(p, x, cfg: ModelConfig, state):
+    """Single-token decode via the length-1 sequence path."""
+    ln1 = _ln(p["ln1"], x, cfg.norm_eps)
+    h, (tm_x, wkv) = time_mix(
+        p["tm"], ln1, cfg, prev_x=state["tm_x"], wkv_state=state["wkv"],
+        return_state=True,
+    )
+    x = x + h
+    h, cm_x = channel_mix(
+        p["cm"], _ln(p["ln2"], x, cfg.norm_eps), prev_x=state["cm_x"],
+        return_state=True,
+    )
+    x = x + h
+    return x, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}

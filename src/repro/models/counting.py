@@ -1,0 +1,50 @@
+"""Analytic parameter counts via eval_shape (no weights materialized)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@functools.lru_cache(maxsize=64)
+def _shapes(cfg: ModelConfig):
+    from repro.models.api import init_params
+    from repro.models.params import unbox
+
+    def init(rng):
+        values, _ = unbox(init_params(cfg, rng))
+        return values
+
+    return jax.eval_shape(init, jax.ShapeDtypeStruct((2,), np.uint32))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = _shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if active_only and cfg.n_experts and any(
+            k in ("w_gate", "w_up", "w_down") for k in keys
+        ) and "moe" in keys:
+            # only top_k of n_experts are active per token
+            n = int(n * cfg.top_k / cfg.n_experts)
+        total += n
+    return total
+
+
+def embedding_params(cfg: ModelConfig) -> int:
+    n = cfg.vocab_size * cfg.d_model
+    shapes = _shapes(cfg)
+    has_head = "lm_head" in shapes
+    return n * (2 if has_head else 1)
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """6·N (per token) with N = active non-embedding params — the standard
+    MODEL_FLOPS used in §Roofline's usefulness ratio."""
+    n_active = count_params(cfg, active_only=True) - embedding_params(cfg)
+    return 6.0 * max(n_active, 0)

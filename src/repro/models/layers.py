@@ -1,0 +1,329 @@
+"""Shared building blocks: norms, RoPE, MLP, GQA attention, MoE.
+
+All functions are pure; parameters arrive as (already unboxed) dict leaves.
+Hot activations are annotated with ``constrain`` so the same code lowers
+single-device (rules absent -> no-op) and on the production mesh.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# §Perf baselines: REPRO_LEGACY_DECODE=1 re-enables the pre-optimization
+# decode paths ((B,S,K,hd) cache layout + per-step transpose; MoE decode
+# capacity = T) so before/after roofline numbers use the same cost model.
+LEGACY_DECODE = os.environ.get("REPRO_LEGACY_DECODE", "0") == "1"
+
+from repro.configs.base import ModelConfig
+from repro.models.params import Initializer
+from repro.sharding.logical import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(ini: Initializer, cfg: ModelConfig, d: int):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": ini.ones((d,), ("norm",), dtype=jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": ini.ones((d,), ("norm",), dtype=jnp.float32),
+            "bias": ini.zeros((d,), ("norm",), dtype=jnp.float32),
+        }
+    if cfg.norm_type == "nonparametric_ln":  # OLMo
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        if cfg.norm_type == "layernorm":
+            y = y * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(ini: Initializer, cfg: ModelConfig, d: Optional[int] = None, d_ff: Optional[int] = None):
+    d = d or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    if cfg.mlp_activation == "silu":  # gated
+        return {
+            "w_gate": ini.normal((d, d_ff), ("embed", "mlp")),
+            "w_up": ini.normal((d, d_ff), ("embed", "mlp")),
+            "w_down": ini.normal((d_ff, d), ("mlp", "embed")),
+        }
+    return {  # plain gelu MLP (encoder-style)
+        "w_in": ini.normal((d, d_ff), ("embed", "mlp")),
+        "b_in": ini.zeros((d_ff,), ("mlp",)),
+        "w_out": ini.normal((d_ff, d), ("mlp", "embed")),
+        "b_out": ini.zeros((d,), ("embed",)),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.mlp_activation == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = constrain(h, ("act_batch", "act_seq", "act_mlp"))
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    h = constrain(h, ("act_batch", "act_seq", "act_mlp"))
+    return h @ p["w_out"] + p["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(ini: Initializer, cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": ini.normal((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ini.normal((d, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ini.normal((d, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ini.normal((H, hd, d), ("heads", "head_dim", "embed"), std=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ini.zeros((H, hd), ("heads", "head_dim"))
+        p["bk"] = ini.zeros((K, hd), ("kv_heads", "head_dim"))
+        p["bv"] = ini.zeros((K, hd), ("kv_heads", "head_dim"))
+    if cfg.attn_out_bias:
+        p["bo"] = ini.zeros((d,), ("embed",))
+    return p
+
+
+def qkv_project(p, x, cfg: ModelConfig, positions, *, use_rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", "act_head_dim"))
+    k = constrain(k, ("act_batch", "act_seq", "act_kv_heads", "act_head_dim"))
+    v = constrain(v, ("act_batch", "act_seq", "act_kv_heads", "act_head_dim"))
+    return q, k, v
+
+
+def attn_output(p, ctx, cfg: ModelConfig):
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return constrain(out, ("act_batch", "act_seq", "act_embed"))
+
+
+def attention_layer(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    causal: bool,
+    positions=None,
+    use_rope: bool = True,
+    sliding_window: Optional[int] = None,
+):
+    """Full-sequence (train / prefill) attention. Returns (out, (k, v))."""
+    from repro.kernels.flash_attention import ops as flash_ops
+
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = qkv_project(p, x, cfg, positions, use_rope=use_rope)
+    ctx = flash_ops.flash_attention(
+        q, k, v, causal=causal, window=sliding_window, softcap=cfg.attn_logit_softcap
+    )
+    return attn_output(p, ctx, cfg), (k, v)
+
+
+def attention_decode(
+    p,
+    x,
+    cfg: ModelConfig,
+    k_cache,
+    v_cache,
+    cur_index,
+    *,
+    use_rope: bool = True,
+    sliding_window: Optional[int] = None,
+):
+    """Single-token decode.  Caches use the kernel-native layout
+    (B, K, S_max, hd) — sequence-innermost, so the per-step update writes one
+    (B, K, 1, hd) slice and the attention sweep streams the cache with NO
+    transpose (§Perf iteration 1).  Returns (out, (k_cache, v_cache))."""
+    from repro.kernels.decode_attention import ops as dec_ops
+
+    B = x.shape[0]
+    cur_index = jnp.asarray(cur_index)
+    vector_pos = cur_index.ndim == 1  # per-slot positions (continuous batching)
+    positions = (
+        cur_index[:, None] if vector_pos else jnp.full((B, 1), cur_index)
+    )
+    q, k, v = qkv_project(p, x, cfg, positions, use_rope=use_rope)
+    if vector_pos:
+        # scatter one token per sequence at its own position
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, :, cur_index, :].set(
+            k[:, 0].astype(k_cache.dtype)
+        )
+        v_cache = v_cache.at[bidx, :, cur_index, :].set(
+            v[:, 0].astype(v_cache.dtype)
+        )
+        ctx = dec_ops.decode_attention_bksd(
+            q, k_cache, v_cache, cur_len=cur_index + 1,
+            window=sliding_window, softcap=cfg.attn_logit_softcap,
+        )
+        return attn_output(p, ctx, cfg), (k_cache, v_cache)
+    if LEGACY_DECODE:  # (B, S, K, hd) cache + per-step transpose
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cur_index, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cur_index, axis=1
+        )
+        ctx = dec_ops.decode_attention(
+            q, k_cache, v_cache, cur_len=cur_index + 1,
+            window=sliding_window, softcap=cfg.attn_logit_softcap,
+        )
+        return attn_output(p, ctx, cfg), (k_cache, v_cache)
+    k_new = k.transpose(0, 2, 1, 3).astype(k_cache.dtype)  # (B, K, 1, hd)
+    v_new = v.transpose(0, 2, 1, 3).astype(v_cache.dtype)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, cur_index, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, cur_index, axis=2)
+    ctx = dec_ops.decode_attention_bksd(
+        q,
+        k_cache,
+        v_cache,
+        cur_len=cur_index + 1,
+        window=sliding_window,
+        softcap=cfg.attn_logit_softcap,
+    )
+    return attn_output(p, ctx, cfg), (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, capacity-dropped, scatter dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(ini: Initializer, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": ini.normal((d, E), ("embed", "experts"), dtype=jnp.float32),
+        "w_gate": ini.normal((E, d, f), ("experts", "embed", "expert_mlp")),
+        "w_up": ini.normal((E, d, f), ("experts", "embed", "expert_mlp")),
+        "w_down": ini.normal((E, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ini, cfg, d, f * cfg.n_shared_experts)
+    return p
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Sort-free scatter dispatch: per-token expert choice -> position within the
+    expert's capacity buffer via a cumulative count; overflowing tokens are
+    dropped (standard capacity-factor semantics).  Experts shard over the
+    'model' mesh axis (expert parallelism); GSPMD inserts the all-to-alls.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    gate_logits = (xt.astype(jnp.float32) @ p["router"])  # (T, E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    if S == 1:
+        # decode (§Perf iteration 2): a C=T no-drop buffer makes every expert
+        # compute T rows — E× overcompute for top-1 at B≈E.  A 2× balance
+        # slack keeps drops rare while the expert matmuls stay O(T·K) total.
+        if LEGACY_DECODE:
+            capacity = T
+        else:
+            capacity = min(T, max(8, int(math.ceil(T * K / E * 2.0))))
+    else:
+        capacity = max(1, int(math.ceil(T * K / E * cfg.capacity_factor)))
+
+    # Position of each (token, k) within its expert's buffer.
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (T, K, E)
+    flat_oh = onehot.reshape(T * K, E)
+    pos_in_expert = (jnp.cumsum(flat_oh, axis=0) - flat_oh)  # exclusive
+    pos = (pos_in_expert * flat_oh).sum(-1).reshape(T, K)  # (T, K)
+    keep = (pos < capacity).astype(x.dtype)
+
+    # Scatter tokens into (E, C, D) expert buffers.
+    buf = jnp.zeros((E, capacity, D), x.dtype)
+    scatter_idx = jnp.stack(
+        [expert_idx.reshape(-1), jnp.clip(pos.reshape(-1), 0, capacity - 1)], axis=-1
+    )  # (T*K, 2)
+    contrib = (xt[:, None, :] * keep[:, :, None]).reshape(T * K, D)
+    buf = buf.at[scatter_idx[:, 0], scatter_idx[:, 1]].add(contrib)
+    _cap_axis = None if LEGACY_DECODE else "act_capacity"  # §Perf iter 5
+    buf = constrain(buf, ("act_experts", _cap_axis, "act_embed"))
+
+    # Expert FFNs, vmapped over E (sharded over 'model').
+    def expert_ffn(wg, wu, wd, h):
+        a = jax.nn.silu(h @ wg) * (h @ wu)
+        return a @ wd
+
+    out_buf = jax.vmap(expert_ffn)(p["w_gate"], p["w_up"], p["w_down"], buf)
+    out_buf = constrain(out_buf, ("act_experts", _cap_axis, "act_embed"))
+
+    # Gather back and combine with gate values.
+    gathered = out_buf[scatter_idx[:, 0], scatter_idx[:, 1]].reshape(T, K, D)
+    combined = (gathered * (gate_vals.astype(x.dtype) * keep)[:, :, None]).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        combined = combined + apply_mlp(p["shared"], xt[None], cfg)[0]
+
+    return combined.reshape(B, S, D), aux

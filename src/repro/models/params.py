@@ -1,0 +1,107 @@
+"""Boxed parameters: every leaf carries its logical sharding axes.
+
+:class:`Box` is registered as a pytree node whose ``axes`` are static aux
+data, so boxed trees flow through ``jax.eval_shape`` / ``vmap`` untouched —
+this is what lets the dry-run derive full-size parameter shapes + shardings
+without materializing a single weight.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class Box:
+    """An array leaf paired with its logical sharding axes."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Box(shape={shape}, axes={self.axes})"
+
+
+def is_box(x) -> bool:
+    return isinstance(x, Box)
+
+
+def unbox(tree):
+    """Split a boxed tree into (values, axes) trees of identical structure."""
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_box)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_box)
+    return values, axes
+
+
+def box_like(values, axes_tree):
+    """Re-pair a values tree with an axes tree (inverse of :func:`unbox`)."""
+    leaves_v, treedef = jax.tree.flatten(values)
+    leaves_a = treedef.flatten_up_to(axes_tree)
+    return treedef.unflatten([Box(v, a) for v, a in zip(leaves_v, leaves_a)])
+
+
+class Initializer:
+    """Sequential PRNG splitter used by the layer init functions."""
+
+    def __init__(self, rng: jax.Array, dtype):
+        self._rng = rng
+        self.dtype = jnp.dtype(dtype)
+
+    def _next(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def normal(self, shape, axes, *, std: Optional[float] = None, dtype=None):
+        if std is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / math.sqrt(fan_in)
+        v = jax.random.normal(self._next(), shape, dtype=jnp.float32) * std
+        return Box(v.astype(dtype or self.dtype), tuple(axes))
+
+    def zeros(self, shape, axes, dtype=None):
+        return Box(jnp.zeros(shape, dtype=dtype or self.dtype), tuple(axes))
+
+    def ones(self, shape, axes, dtype=None):
+        return Box(jnp.ones(shape, dtype=dtype or self.dtype), tuple(axes))
+
+    def const(self, value, axes, dtype=None):
+        v = jnp.asarray(value, dtype=dtype or self.dtype)
+        return Box(v, tuple(axes))
+
+
+def stack_layers(init_one, n_layers: int, rng: jax.Array):
+    """Initialize ``n_layers`` layers via vmap and prepend a 'layers' logical
+    axis to every leaf (for ``lax.scan`` over depth)."""
+    keys = jax.random.split(rng, n_layers)
+    stacked = jax.vmap(init_one)(keys)
+    return jax.tree.map(
+        lambda b: Box(b.value, ("layers",) + b.axes), stacked, is_leaf=is_box
+    )
+
+
+def param_count(values_tree) -> int:
+    return int(sum(np.prod(v.shape) for v in jax.tree.leaves(values_tree)))
+
+
+def param_bytes(values_tree) -> int:
+    return int(
+        sum(
+            np.prod(v.shape) * jnp.dtype(v.dtype).itemsize
+            for v in jax.tree.leaves(values_tree)
+        )
+    )

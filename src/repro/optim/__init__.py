@@ -1,0 +1,10 @@
+from repro.optim.adamw import adamw_init, adamw_update, OptimConfig
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "OptimConfig",
+    "cosine_schedule",
+    "linear_warmup",
+]

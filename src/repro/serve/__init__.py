@@ -1,0 +1,11 @@
+from repro.serve.batching import Request, RequestQueue
+from repro.serve.engine import ServingEngine
+from repro.serve.cascade_server import CascadeServer, CascadeTier
+
+__all__ = [
+    "Request",
+    "RequestQueue",
+    "ServingEngine",
+    "CascadeServer",
+    "CascadeTier",
+]

@@ -1,0 +1,65 @@
+"""Request batching: static-shape buckets (pad to powers of two) so the
+jitted prefill/decode programs are reused across batches."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray  # (S,) int32 prompt
+    max_new_tokens: int = 16
+    rid: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    tier: int = -1
+
+
+def _pow2_at_least(n: int, floor: int = 8) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+class RequestQueue:
+    """FIFO queue that emits fixed-shape batches."""
+
+    def __init__(self, max_batch: int = 32, pad_token: int = 0):
+        self.max_batch = max_batch
+        self.pad_token = pad_token
+        self._q: deque = deque()
+
+    def submit(self, req: Request):
+        self._q.append(req)
+
+    def __len__(self):
+        return len(self._q)
+
+    def next_batch(self) -> Optional[List[Request]]:
+        if not self._q:
+            return None
+        batch = []
+        while self._q and len(batch) < self.max_batch:
+            batch.append(self._q.popleft())
+        return batch
+
+    def pad_batch(self, batch: List[Request]):
+        """Returns (tokens (B', S') int32, n_real) with B'/S' padded to
+        powers of two (B' also padded so jit programs are reused)."""
+        n = len(batch)
+        B = _pow2_at_least(n)
+        S = _pow2_at_least(max(len(r.tokens) for r in batch))
+        toks = np.full((B, S), self.pad_token, np.int32)
+        for i, r in enumerate(batch):
+            toks[i, S - len(r.tokens):] = r.tokens  # right-align prompts
+        for i in range(n, B):
+            toks[i] = toks[n - 1]
+        return toks, n

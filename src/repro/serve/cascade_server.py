@@ -1,0 +1,113 @@
+"""CascadeServer: ABC as a first-class serving runtime feature.
+
+Tiers hold ensembles (stacked weights, vmapped members).  Two modes:
+
+* ``classify`` — each tier's ensemble produces last-token logits; the
+  agreement rule (Eq. 3/4) selects or defers; deferred examples are
+  compacted and re-batched for the next tier (host routing — the form whose
+  measured cost reproduces Prop 4.1.2).
+
+* ``generate`` — black-box flavor (§5.2.3): each member generates answers
+  (optionally temperature-sampled); agreement is exact-match voting over
+  canonicalized outputs (Eq. 3 with vote_rule_from_preds).
+
+Cost accounting per tier uses the TierSpec cost units (FLOPs, $/Mtok,
+GPU-$/h, comm-delay), so the same server drives all three §5.2 scenarios.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import deferral, ensemble as ens
+from repro.core.cascade import CascadeResult, TierSpec, cascade_apply_routed
+from repro.serve.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class CascadeTier:
+    cfg: ModelConfig
+    values: dict  # stacked member params (leading ensemble axis)
+    spec: TierSpec
+    temperature: float = 0.0  # >0 for black-box sampled voting
+
+    def __post_init__(self):
+        self.k = ens.member_count(self.values)
+        self._last_logits = jax.jit(
+            functools.partial(ens.ensemble_last_logits, cfg=self.cfg)
+        )
+
+    def member_engine(self, i: int, **kw) -> ServingEngine:
+        return ServingEngine(self.cfg, ens.take_member(self.values, i), **kw)
+
+
+class CascadeServer:
+    def __init__(self, tiers: Sequence[CascadeTier], *, pad_to: int = 8):
+        self.tiers = list(tiers)
+        self.pad_to = pad_to
+
+    # -- classification serving -------------------------------------------
+    def classify(self, tokens: np.ndarray) -> CascadeResult:
+        """tokens (B, S) -> CascadeResult with per-tier routing stats."""
+
+        def tier_fn(tier: CascadeTier):
+            def fn(batch):
+                return tier._last_logits(tier.values, {"tokens": jnp.asarray(batch["tokens"])})
+
+            return fn
+
+        fns = [tier_fn(t) for t in self.tiers]
+        specs = [t.spec for t in self.tiers]
+        return cascade_apply_routed(fns, specs, {"tokens": tokens}, pad_to=self.pad_to)
+
+    # -- black-box generation serving --------------------------------------
+    def generate(
+        self, tokens: np.ndarray, max_new_tokens: int = 8, seed: int = 0
+    ) -> CascadeResult:
+        """Each member generates; members' answers are hashed to ids and
+        vote-compared (the paper's API scenario where only text comes back).
+        """
+
+        def tier_fn(tier: CascadeTier):
+            def fn(batch):
+                toks = np.asarray(batch["tokens"])
+                preds = []
+                for i in range(tier.k):
+                    eng = tier.member_engine(
+                        i, temperature=tier.temperature, seed=seed + i
+                    )
+                    out = eng.generate(toks, max_new_tokens)  # (B, T)
+                    # canonicalize: hash the generated id sequence
+                    h = np.asarray(
+                        [hash(bytes(row.tobytes())) % (2**31 - 1) for row in out],
+                        np.int32,
+                    )
+                    preds.append(h)
+                return jnp.asarray(np.stack(preds))  # (E, B) ids
+
+            return fn
+
+        # vote_rule_from_preds via a rule shim: reuse 'vote' on preds
+        def shim(spec: TierSpec):
+            return dataclasses.replace(spec, rule="vote_preds")
+
+        deferral.RULES.setdefault(
+            "vote_preds",
+            lambda preds, theta: deferral.vote_rule_from_preds(preds, theta),
+        )
+        fns = [tier_fn(t) for t in self.tiers]
+        specs = [shim(t.spec) for t in self.tiers]
+        return cascade_apply_routed(fns, specs, {"tokens": tokens}, pad_to=self.pad_to)
+
+    # -- accounting ---------------------------------------------------------
+    def expected_cost(self, result: CascadeResult) -> float:
+        return result.cost
+
+    def tier_fractions(self, result: CascadeResult) -> np.ndarray:
+        return result.tier_counts / max(1, result.tier_counts.sum())

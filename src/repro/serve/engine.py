@@ -1,0 +1,177 @@
+"""Single-model serving engine: jitted prefill + decode loop.
+
+Prompts in a batch are padded to a common length (left-aligned padding is
+prepended so the *ends* of all prompts coincide — the causal mask then makes
+pad tokens only able to pollute other pads' cache rows, not real tokens'
+futures; per-request attention masks are a noted production extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.serve.batching import Request, RequestQueue
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 32,
+        max_seq: int = 512,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self._rng = jax.random.PRNGKey(seed)
+        self.queue = RequestQueue(max_batch=max_batch)
+        self._prefill = jax.jit(functools.partial(api.prefill, cfg=cfg))
+        self._decode = jax.jit(functools.partial(api.decode_step, cfg=cfg))
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "batches": 0}
+
+    # -- low-level --------------------------------------------------------
+    def classify(self, tokens: np.ndarray) -> np.ndarray:
+        """Last-token logits as a classifier head: tokens (B, S) -> (B, V)."""
+        logits, _ = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
+        self.stats["prefill_tokens"] += tokens.size
+        return np.asarray(logits)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._rng, k = jax.random.split(self._rng)
+        return jax.random.categorical(k, logits / self.temperature).astype(jnp.int32)
+
+    def generate(self, tokens: np.ndarray, max_new_tokens: int) -> np.ndarray:
+        """Greedy/temperature generation: tokens (B, S) -> (B, max_new)."""
+        B, S = tokens.shape
+        total = S + max_new_tokens
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
+        self.stats["prefill_tokens"] += tokens.size
+        # grow the kv cache to the full generation length
+        # cache layout is (L/inv, B, KVH, S, hd) — pad the sequence axis (3)
+        if self.cfg.family in ("dense", "moe", "vlm"):
+            pad = total - cache["k"].shape[3]
+            if pad > 0:
+                cache = {
+                    k2: jnp.pad(v2, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+                    for k2, v2 in cache.items()
+                }
+        elif self.cfg.family == "hybrid":
+            # per-invocation caches: list of (B, K, S, hd)
+            pad = total - cache["attn_k"][0].shape[2]
+            if pad > 0:
+                cache = dict(cache)
+                for k2 in ("attn_k", "attn_v"):
+                    cache[k2] = [
+                        jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                        for c in cache[k2]
+                    ]
+        out = []
+        tok = self._sample(logits)[:, None]
+        for t in range(max_new_tokens):
+            out.append(np.asarray(tok)[:, 0])
+            if t == max_new_tokens - 1:
+                break
+            logits, cache = self._decode(
+                self.params, tok, cache, jnp.int32(S + t)
+            )
+            self.stats["decode_tokens"] += B
+            tok = self._sample(logits)[:, None]
+        return np.stack(out, axis=1)
+
+    # -- continuous batching ----------------------------------------------
+    def serve_continuous(
+        self, requests: List[Request], *, n_slots: int = 8, max_seq: Optional[int] = None
+    ) -> List[Request]:
+        """Slot-based continuous batching: one decode step advances every
+        active slot by one token at its OWN position (per-slot ``pos``
+        vector; see decode_attention per-sequence lengths).  New requests
+        are admitted into freed slots mid-stream; their prompts are
+        consumed through the same decode program (decode-only admission —
+        uniform shapes, one compiled program; chunked prefill admission is
+        the production extension).  Returns the completed requests."""
+        from repro.models import api
+        from repro.models.params import unbox as _unbox
+
+        cfg = self.cfg
+        assert not cfg.is_encoder
+        if max_seq is None:
+            max_seq = self.max_seq
+        cache_boxed = api.init_cache(cfg, n_slots, max_seq)
+        cache = jax.tree.map(lambda b: b.value, cache_boxed,
+                             is_leaf=lambda x: hasattr(x, "axes"))
+        decode = jax.jit(functools.partial(api.decode_step, cfg=cfg))
+
+        queue = list(requests)
+        done: List[Request] = []
+        slot_req: List[Optional[Request]] = [None] * n_slots
+        slot_consumed = np.zeros(n_slots, np.int64)  # prompt tokens fed
+        slot_emitted = [list() for _ in range(n_slots)]
+        pos = np.zeros(n_slots, np.int32)
+        tok = np.zeros((n_slots, 1), np.int32)
+
+        def admit(s):
+            if not queue:
+                slot_req[s] = None
+                return
+            r = queue.pop(0)
+            slot_req[s] = r
+            slot_consumed[s] = 1
+            slot_emitted[s] = []
+            pos[s] = 0
+            tok[s, 0] = r.tokens[0]
+
+        for s in range(n_slots):
+            admit(s)
+
+        while any(r is not None for r in slot_req):
+            logits, cache = decode(
+                self.params, jnp.asarray(tok), cache, jnp.asarray(pos)
+            )
+            nxt = np.asarray(self._sample(logits))
+            self.stats["decode_tokens"] += int(sum(r is not None for r in slot_req))
+            for s, r in enumerate(slot_req):
+                if r is None:
+                    continue
+                pos[s] += 1
+                if slot_consumed[s] < len(r.tokens):
+                    # still feeding the prompt
+                    tok[s, 0] = r.tokens[slot_consumed[s]]
+                    slot_consumed[s] += 1
+                else:
+                    slot_emitted[s].append(int(nxt[s]))
+                    tok[s, 0] = nxt[s]
+                    if len(slot_emitted[s]) >= r.max_new_tokens or pos[s] >= max_seq - 1:
+                        r.output = np.asarray(slot_emitted[s], np.int32)
+                        done.append(r)
+                        admit(s)
+        return done
+
+    # -- queue-driven serving --------------------------------------------
+    def serve_pending(self) -> List[Request]:
+        done = []
+        while True:
+            batch = self.queue.next_batch()
+            if batch is None:
+                return done
+            toks, n = self.queue.pad_batch(batch)
+            max_new = max(r.max_new_tokens for r in batch)
+            gen = self.generate(toks, max_new)
+            self.stats["batches"] += 1
+            for i, r in enumerate(batch):
+                r.output = gen[i, : r.max_new_tokens]
+                done.append(r)

@@ -1,0 +1,27 @@
+"""Sharding substrate: mesh helpers and logical-axis partitioning rules."""
+from repro.sharding.logical import (
+    LogicalAxisRules,
+    logical_to_pspec,
+    logical_sharding,
+    tree_pspecs,
+    with_logical_constraint,
+    RULES_TRAIN,
+    RULES_PREFILL,
+    RULES_DECODE,
+    rules_for,
+)
+from repro.sharding.mesh import local_mesh, mesh_axis_size
+
+__all__ = [
+    "LogicalAxisRules",
+    "logical_to_pspec",
+    "logical_sharding",
+    "tree_pspecs",
+    "with_logical_constraint",
+    "RULES_TRAIN",
+    "RULES_PREFILL",
+    "RULES_DECODE",
+    "rules_for",
+    "local_mesh",
+    "mesh_axis_size",
+]

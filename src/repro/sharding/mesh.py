@@ -1,0 +1,24 @@
+"""Mesh helpers that are safe to import (no device-state side effects)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def local_mesh(axis_names: Sequence[str] = ("data", "model")) -> Mesh:
+    """A degenerate mesh over however many devices are actually present.
+
+    Used by smoke tests and examples: all devices on the first axis, size-1
+    trailing axes, so the same pjit code paths run on 1 CPU device.
+    """
+    n = jax.device_count()
+    shape = (n,) + (1,) * (len(axis_names) - 1)
+    devices = np.array(jax.devices()).reshape(shape)
+    return Mesh(devices, axis_names)
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]

@@ -1,0 +1,4 @@
+from repro.train.step import TrainState, make_train_step, init_train_state
+from repro.train.loop import train_loop
+
+__all__ = ["TrainState", "make_train_step", "init_train_state", "train_loop"]

@@ -1,0 +1,61 @@
+"""train_step: loss -> grads -> AdamW, as a single pjit-able function.
+
+The same function lowers on 1 CPU device (smoke tests), on the 256-chip pod
+and on the 512-chip two-pod mesh — sharding comes entirely from the logical
+axis annotations + in/out shardings derived in launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.optim.adamw import OptimConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt: dict
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(params, ocfg: OptimConfig) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params, ocfg), step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ocfg: OptimConfig,
+    *,
+    total_steps: int = 10_000,
+    warmup_steps: int = 100,
+    window_override: Optional[int] = None,
+):
+    def train_step(state: TrainState, batch):
+        def lf(p):
+            return api.loss_fn(p, batch, cfg, window_override=window_override)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
+        lr_scale = cosine_schedule(state.step, total_steps, warmup_steps)
+        new_params, new_opt, om = adamw_update(
+            grads, state.opt, state.params, ocfg, lr_scale=lr_scale
+        )
+        metrics = dict(metrics, loss=loss, **om, step=state.step)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src layout without install (+ repo root for the benchmarks package)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 host devices.

@@ -1,0 +1,151 @@
+"""ABC core: deferral rules, calibration, cascade forms, cost model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import calibration, cost_model, deferral, theory
+from repro.core.cascade import TierSpec, cascade_apply_dense, cascade_apply_routed
+
+
+def _synthetic_tier(E, B, V, correct_p, y, seed=0):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(0, 1, (E, B, V)).astype(np.float32)
+    for e in range(E):
+        corr = rng.random(B) < correct_p
+        wrong = (y + 1 + rng.integers(0, V - 1, B)) % V
+        logits[e, np.arange(B), np.where(corr, y, wrong)] += 4
+    return jnp.asarray(logits)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    B, V, E = 1500, 10, 3
+    y = rng.integers(0, V, B)
+    easy = rng.random(B) < 0.6
+    p1 = np.where(easy, 0.97, 0.25)
+    t1 = _synthetic_tier(E, B, V, p1, y, seed=1)
+    t2 = _synthetic_tier(1, B, V, 0.9, y, seed=2)
+    return {"y": y, "easy": easy, "t1": t1, "t2": t2, "B": B}
+
+
+def test_vote_rule_bounds(setup):
+    out = deferral.vote_rule(setup["t1"], theta=0.5)
+    s = np.asarray(out.score)
+    E = setup["t1"].shape[0]
+    assert (s >= 1.0 / E - 1e-6).all() and (s <= 1.0 + 1e-6).all()
+
+
+def test_vote_rule_from_preds_matches_logits(setup):
+    logits = setup["t1"]
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    a = deferral.vote_rule(logits, 0.6)
+    b = deferral.vote_rule_from_preds(preds, 0.6)
+    np.testing.assert_allclose(np.asarray(a.score), np.asarray(b.score))
+    np.testing.assert_array_equal(np.asarray(a.defer), np.asarray(b.defer))
+
+
+def test_selected_subset_is_accurate(setup):
+    """The heart of ABC: agreement identifies the subset where the small
+    ensemble is right (safe deferral, Def. 4.1)."""
+    out = deferral.vote_rule(setup["t1"], theta=0.67)
+    sel = ~np.asarray(out.defer)
+    acc_sel = (np.asarray(out.pred)[sel] == setup["y"][sel]).mean()
+    assert acc_sel > 0.97
+    assert sel.mean() > 0.3  # and it actually selects a useful fraction
+
+
+def test_calibration_feasible(setup):
+    out = deferral.vote_rule(setup["t1"], theta=0.0)
+    correct = np.asarray(out.pred) == setup["y"]
+    theta, info = calibration.estimate_threshold(
+        np.asarray(out.score), correct, epsilon=0.02
+    )
+    assert info["failure_rate"] <= 0.02
+    assert info["selection_rate"] > 0.2
+
+
+def test_calibration_monotone_in_epsilon(setup):
+    out = deferral.vote_rule(setup["t1"], theta=0.0)
+    correct = np.asarray(out.pred) == setup["y"]
+    s = np.asarray(out.score)
+    sels = []
+    for eps in (0.0, 0.01, 0.03, 0.05, 0.2):
+        _, info = calibration.estimate_threshold(s, correct, epsilon=eps)
+        sels.append(info["selection_rate"])
+    assert all(a <= b + 1e-9 for a, b in zip(sels, sels[1:]))
+
+
+def test_calibration_infeasible_degenerates_safely():
+    scores = np.full(100, 1.0)
+    correct = np.zeros(100, bool)  # always wrong at max confidence
+    theta, info = calibration.estimate_threshold(scores, correct, epsilon=0.0)
+    assert info["selection_rate"] == 0.0  # always defer
+
+
+def test_dense_equals_routed(setup):
+    fns = [
+        lambda b: setup["t1"][:, b["idx"]],
+        lambda b: setup["t2"][:, b["idx"]],
+    ]
+    specs = [
+        TierSpec("t1", "vote", 0.67, k=3, cost=1.0),
+        TierSpec("t2", "confidence", -1.0, k=1, cost=50.0),
+    ]
+    idx = np.arange(setup["B"])
+    pred_d, tier_d, _ = cascade_apply_dense(fns, specs, {"idx": idx})
+    res = cascade_apply_routed(fns, specs, {"idx": idx}, pad_to=8)
+    np.testing.assert_array_equal(np.asarray(pred_d), res.pred)
+    np.testing.assert_array_equal(np.asarray(tier_d), res.tier_of)
+
+
+def test_routed_cost_less_than_all_large(setup):
+    fns = [
+        lambda b: setup["t1"][:, b["idx"]],
+        lambda b: setup["t2"][:, b["idx"]],
+    ]
+    specs = [
+        TierSpec("t1", "vote", 0.67, k=3, cost=1.0),
+        TierSpec("t2", "confidence", -1.0, k=1, cost=50.0),
+    ]
+    res = cascade_apply_routed(fns, specs, {"idx": np.arange(setup["B"])})
+    assert res.cost < 50.0 * setup["B"]
+    # drop-in: accuracy >= large model alone - small epsilon
+    acc_casc = (res.pred == setup["y"]).mean()
+    acc_large = (np.asarray(setup["t2"][0].argmax(-1)) == setup["y"]).mean()
+    assert acc_casc >= acc_large - 0.02
+
+
+def test_prop_4_1_cost_formula():
+    # E[C] = (k^rho * gamma + P(defer)) * C(h2)
+    c = cost_model.two_level_expected_cost(gamma=0.02, k=3, rho=1.0, defer_rate=0.4)
+    assert np.isclose(c, 3 * 0.02 + 0.4)
+
+
+def test_fig3_cost_saved_shapes():
+    # gamma <= 1/50: sequential ~ parallel (paper Fig. 3 right)
+    seq = cost_model.fraction_cost_saved(1 / 50, 3, 0.0, 0.6)
+    par = cost_model.fraction_cost_saved(1 / 50, 3, 1.0, 0.6)
+    assert abs(seq - par) < 0.05
+    # gamma >= 1/5: sequential loses most of the savings
+    seq5 = cost_model.fraction_cost_saved(1 / 5, 3, 0.0, 0.6)
+    par5 = cost_model.fraction_cost_saved(1 / 5, 3, 1.0, 0.6)
+    assert par5 - seq5 > 0.2
+
+
+def test_theory_identities(setup):
+    out = deferral.vote_rule(setup["t1"], theta=0.67)
+    small = np.asarray(out.pred)
+    large = np.asarray(setup["t2"][0].argmax(-1))
+    defer = np.asarray(out.defer)
+    y = setup["y"]
+    t1, t2, r = theory.cascade_risk_decomposition(small, large, defer, y)
+    assert np.isclose(t1 + t2, r)
+    ex = theory.excess_risk(small, large, defer, y)
+    exi = theory.excess_risk_identity(small, large, defer, y)
+    assert np.isclose(ex, exi, atol=1e-12)
+    eps = theory.safe_rule_epsilon(small, defer, y)
+    # Prop 4.1.1: R(cascade) <= R(h2) + eps
+    casc_risk = theory.risk(np.where(defer, large, small), y)
+    assert casc_risk <= theory.risk(large, y) + eps + 1e-12

@@ -1,0 +1,245 @@
+"""Per-kernel correctness sweeps: Pallas (interpret=True) and the XLA
+fallback vs the pure-jnp ref.py oracle, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import config as kcfg
+from repro.kernels.agreement import ops as agree_ops, ref as agree_ref
+from repro.kernels.decode_attention import ops as dec_ops, ref as dec_ref
+from repro.kernels.flash_attention import ops as flash_ops, ref as flash_ref
+from repro.kernels.mamba2_ssd import ops as ssd_ops, ref as ssd_ref
+from repro.kernels.rwkv6_wkv import ops as wkv_ops, ref as wkv_ref
+
+IMPLS = ["xla", "pallas_interpret"]
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize(
+    "B,S,H,KVH,hd,causal,window",
+    [
+        (1, 128, 4, 4, 64, True, None),
+        (2, 256, 4, 2, 64, True, None),
+        (2, 256, 8, 1, 32, True, 64),
+        (1, 512, 4, 4, 64, False, None),  # encoder
+        (2, 128, 4, 2, 128, True, 32),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(impl, B, S, H, KVH, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32).astype(dtype)
+    ref = flash_ref.attention_ref(q, k, v, causal=causal, window=window)
+    with kcfg.use_impl(impl):
+        out = flash_ops.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize(
+    "causal,window,softcap",
+    [(True, None, None), (True, 32, None), (False, None, None), (True, None, 10.0)],
+)
+def test_flash_attention_custom_vjp_grads(causal, window, softcap):
+    """The chunked flash backward (custom_vjp) matches AD through the naive
+    oracle for q/k/v cotangents."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    B, S, H, KVH, hd = 2, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    do = jax.random.normal(ks[3], (B, S, H, hd))
+    f1 = lambda q, k, v: (
+        flash_ops.flash_attention(q, k, v, causal=causal, window=window, softcap=softcap) * do
+    ).sum()
+    f2 = lambda q, k, v: (
+        flash_ref.attention_ref(q, k, v, causal=causal, window=window, softcap=softcap) * do
+    ).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_flash_attention_softcap(impl):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    ref = flash_ref.attention_ref(q, k, v, causal=True, softcap=20.0)
+    with kcfg.use_impl(impl):
+        out = flash_ops.flash_attention(q, k, v, causal=True, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize(
+    "B,S,H,KVH,hd,cur,window",
+    [
+        (2, 256, 4, 2, 64, 100, None),
+        (1, 512, 8, 8, 64, 512, None),
+        (2, 256, 4, 1, 128, 200, 64),
+        (3, 128, 6, 2, 32, 1, None),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(impl, B, S, H, KVH, hd, cur, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32).astype(dtype)
+    ref = dec_ref.decode_attention_ref(q, k, v, cur, window=window)
+    with kcfg.use_impl(impl):
+        out = dec_ops.decode_attention(q, k, v, cur, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize(
+    "B,S,H,P,G,N,chunk",
+    [
+        (2, 128, 4, 32, 2, 16, 32),
+        (1, 256, 2, 64, 1, 64, 64),
+        (2, 96, 4, 32, 4, 16, 32),  # padded (96 % 32 == 0 but test chunk 64)
+    ],
+)
+def test_mamba2_ssd(impl, B, S, H, P, G, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    ref, href = ssd_ref.ssd_ref(x, dt, A, Bm, Cm, return_final_state=True)
+    with kcfg.use_impl(impl):
+        if impl == "pallas_interpret" and S % chunk:
+            pytest.skip("pallas path requires divisible chunks")
+        out, h = ssd_ops.ssd(x, dt, A, Bm, Cm, chunk=chunk, return_final_state=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(href), atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_mamba2_ssd_initial_state(impl):
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    B, S, H, P, G, N = 2, 64, 2, 16, 1, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    h0 = jax.random.normal(ks[5], (B, H, N, P)) * 0.2
+    ref = ssd_ref.ssd_ref(x, dt, A, Bm, Cm, initial_state=h0)
+    with kcfg.use_impl(impl):
+        out = ssd_ops.ssd(x, dt, A, Bm, Cm, chunk=32, initial_state=h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4, rtol=5e-4)
+
+
+def test_mamba2_step_matches_scan():
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    B, S, H, P, G, N = 2, 16, 2, 16, 1, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    full = ssd_ref.ssd_ref(x, dt, A, Bm, Cm)
+    st = jnp.zeros((B, H, N, P))
+    for t in range(S):
+        y, st = ssd_ops.ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], st)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, t]), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize(
+    "B,S,H,D,chunk",
+    [(2, 128, 3, 32, 32), (1, 64, 2, 64, 32), (2, 80, 2, 32, 32)],
+)
+def test_rwkv6_wkv(impl, B, S, H, D, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    r = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, D)) * 0.5)
+    u = jax.random.normal(ks[4], (H, D)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, D, D)) * 0.1
+    ref, sref = wkv_ref.wkv6_ref(r, k, v, logw, u, initial_state=s0, return_final_state=True)
+    with kcfg.use_impl(impl):
+        if impl == "pallas_interpret" and S % chunk:
+            pytest.skip("pallas path requires divisible chunks")
+        out, s = wkv_ops.wkv6(r, k, v, logw, u, chunk=chunk, initial_state=s0, return_final_state=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sref), atol=2e-3, rtol=2e-3)
+
+
+def test_rwkv6_step_matches_scan():
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    B, S, H, D = 2, 12, 2, 16
+    r = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, D)) * 0.5)
+    u = jax.random.normal(ks[4], (H, D)) * 0.5
+    full = wkv_ref.wkv6_ref(r, k, v, logw, u)
+    st = jnp.zeros((B, H, D, D))
+    for t in range(S):
+        y, st = wkv_ops.wkv6_step(r[:, t], k[:, t], v[:, t], logw[:, t], u, st)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, t]), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# agreement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("E,B,V", [(2, 128, 2048), (3, 256, 4096), (5, 128, 512)])
+def test_agreement(impl, E, B, V):
+    logits = jax.random.normal(jax.random.PRNGKey(8), (E, B, V)) * 2
+    ref = agree_ref.agreement_ref(logits)
+    with kcfg.use_impl(impl):
+        out = agree_ops.agreement(logits)
+    np.testing.assert_array_equal(np.asarray(out["pred"]), np.asarray(ref["pred"]))
+    np.testing.assert_allclose(np.asarray(out["vote_frac"]), np.asarray(ref["vote_frac"]))
+    np.testing.assert_allclose(
+        np.asarray(out["mean_score"]), np.asarray(ref["mean_score"]), atol=1e-5, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_agreement_identical_members(impl):
+    logits = jnp.tile(jax.random.normal(jax.random.PRNGKey(9), (1, 64, 512)), (4, 1, 1))
+    with kcfg.use_impl(impl):
+        out = agree_ops.agreement(logits)
+    assert float(out["vote_frac"].min()) == 1.0

@@ -1,0 +1,220 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import calibration, cost_model, deferral, theory
+from repro.kernels.agreement import ops as agree_ops
+from repro.sharding.logical import logical_to_pspec
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Prop 4.1.1 holds for ANY deferral rule / predictions (it is an identity
+# plus an inequality on finite samples)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(20, 200),
+    seed=st.integers(0, 10_000),
+    p_defer=st.floats(0.0, 1.0),
+)
+def test_prop411_any_rule(n, seed, p_defer):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 5, n)
+    small = rng.integers(0, 5, n)
+    large = rng.integers(0, 5, n)
+    defer = rng.random(n) < p_defer
+    eps = theory.safe_rule_epsilon(small, defer, y)
+    casc = np.where(defer, large, small)
+    assert theory.risk(casc, y) <= theory.risk(large, y) + eps + 1e-12
+    ex = theory.excess_risk(small, large, defer, y)
+    exi = theory.excess_risk_identity(small, large, defer, y)
+    assert np.isclose(ex, exi, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# agreement reduce invariances
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    e=st.integers(2, 5),
+    b=st.integers(1, 16),
+    v=st.integers(2, 64),
+    seed=st.integers(0, 1000),
+)
+def test_agreement_member_permutation_invariant(e, b, v, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (e, b, v))
+    out1 = agree_ops.agreement(logits)
+    perm = np.random.default_rng(seed).permutation(e)
+    out2 = agree_ops.agreement(logits[perm])
+    np.testing.assert_allclose(
+        np.asarray(out1["vote_frac"]), np.asarray(out2["vote_frac"])
+    )
+    np.testing.assert_allclose(
+        np.asarray(out1["mean_score"]), np.asarray(out2["mean_score"]), atol=1e-6
+    )
+
+
+@settings(**SETTINGS)
+@given(e=st.integers(1, 6), b=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_vote_frac_bounds_and_unanimity(e, b, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (e, b, 32))
+    out = agree_ops.agreement(logits)
+    vf = np.asarray(out["vote_frac"])
+    assert (vf >= 1.0 / e - 1e-6).all() and (vf <= 1.0 + 1e-6).all()
+    same = agree_ops.agreement(jnp.tile(logits[:1], (e, 1, 1)))
+    assert np.allclose(np.asarray(same["vote_frac"]), 1.0)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 8), v=st.integers(2, 64), seed=st.integers(0, 1000))
+def test_mean_score_is_probability(b, v, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (3, b, v)) * 3
+    out = agree_ops.agreement(logits)
+    ms = np.asarray(out["mean_score"])
+    assert (ms > 0).all() and (ms <= 1.0 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# calibration: the returned threshold is always feasible; selection rate is
+# monotone in epsilon
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(30, 300),
+    seed=st.integers(0, 10_000),
+    eps=st.floats(0.0, 0.3),
+)
+def test_calibration_always_feasible(n, seed, eps):
+    rng = np.random.default_rng(seed)
+    scores = rng.random(n)
+    correct = rng.random(n) < scores  # higher score -> more likely correct
+    theta, info = calibration.estimate_threshold(scores, correct, epsilon=eps)
+    assert info["failure_rate"] <= eps + 1e-12
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_calibration_monotone(seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.random(200)
+    correct = rng.random(200) < scores
+    prev = -1.0
+    for eps in (0.0, 0.05, 0.1, 0.2, 0.4):
+        _, info = calibration.estimate_threshold(scores, correct, epsilon=eps)
+        assert info["selection_rate"] >= prev - 1e-12
+        prev = info["selection_rate"]
+
+
+# ---------------------------------------------------------------------------
+# cost model monotonicity (Eq. 1 / Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(1, 8),
+    c0=st.floats(0.01, 10.0),
+    r1=st.floats(0.0, 1.0),
+    r2=st.floats(0.0, 1.0),
+)
+def test_ensemble_cost_monotone_in_rho(k, c0, r1, r2):
+    lo, hi = min(r1, r2), max(r1, r2)
+    assert cost_model.ensemble_cost(c0, k, hi) <= cost_model.ensemble_cost(c0, k, lo) + 1e-9
+    assert np.isclose(cost_model.ensemble_cost(c0, 1, r1), c0)
+
+
+@settings(**SETTINGS)
+@given(
+    g1=st.floats(0.001, 1.0),
+    g2=st.floats(0.001, 1.0),
+    k=st.integers(1, 5),
+    rho=st.floats(0.0, 1.0),
+    sel=st.floats(0.0, 1.0),
+)
+def test_savings_decrease_with_gamma(g1, g2, k, rho, sel):
+    lo, hi = min(g1, g2), max(g1, g2)
+    assert cost_model.fraction_cost_saved(lo, k, rho, sel) >= cost_model.fraction_cost_saved(hi, k, rho, sel) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# cascade: the fully-jitted masked form and the host-routed compacting form
+# are semantically identical for ANY tier count / thresholds / rules, and
+# routed cost accounting matches evaluated-counts × per-tier cost
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n_tiers=st.integers(2, 4),
+    b=st.integers(4, 40),
+    v=st.integers(2, 12),
+    seed=st.integers(0, 10_000),
+    theta=st.floats(0.2, 0.9),
+)
+def test_cascade_dense_equals_routed_any_config(n_tiers, b, v, seed, theta):
+    from repro.core.cascade import TierSpec, cascade_apply_dense, cascade_apply_routed
+
+    rng = np.random.default_rng(seed)
+    tier_logits = [
+        jnp.asarray(rng.normal(0, 2, (rng.integers(1, 4), b, v)).astype(np.float32))
+        for _ in range(n_tiers)
+    ]
+    fns = [lambda batch, L=L: L[:, batch["idx"]] for L in tier_logits]
+    specs = []
+    for i, L in enumerate(tier_logits):
+        last = i == n_tiers - 1
+        rule = "vote" if L.shape[0] > 1 else "confidence"
+        specs.append(
+            TierSpec(f"t{i}", rule, -1.0 if last else theta, k=L.shape[0],
+                     cost=float(10 ** i))
+        )
+    idx = np.arange(b)
+    pred_d, tier_d, _ = cascade_apply_dense(fns, specs, {"idx": idx})
+    res = cascade_apply_routed(fns, specs, {"idx": idx}, pad_to=4)
+    np.testing.assert_array_equal(np.asarray(pred_d), res.pred)
+    np.testing.assert_array_equal(np.asarray(tier_d), res.tier_of)
+    assert (res.tier_of >= 0).all()
+    assert res.tier_counts.sum() == b
+    assert np.isclose(
+        res.cost, sum(s.cost * e for s, e in zip(specs, res.evaluated))
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharding rules: pspecs never violate divisibility and never reuse a mesh
+# axis twice
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    d0=st.integers(1, 64),
+    d1=st.integers(1, 64),
+    seed=st.integers(0, 100),
+)
+def test_pspec_divisibility(d0, d1, seed):
+    import jax
+    from jax.sharding import Mesh
+
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = Mesh(devs, ("data", "model"))
+    rules = {"a": ("data",), "b": ("model",)}
+    spec = logical_to_pspec(("a", "b"), rules, shape=(d0 * 4, d1), mesh=mesh)
+    # axis kept only when it divides
+    if spec[1] == "model":
+        assert d1 % 4 == 0
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat.extend(s if isinstance(s, tuple) else [s])
+    assert len(flat) == len(set(flat))

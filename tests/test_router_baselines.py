@@ -1,0 +1,84 @@
+"""Learned-router baseline (FrugalGPT-style) vs ABC on the same pool."""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import PoolModel, sample_pool_logits, skill_for_accuracy  # noqa: E402
+from repro.core import calibration, deferral  # noqa: E402
+from repro.core.router_baselines import (  # noqa: E402
+    logits_features,
+    margin_rule,
+    router_rule,
+    train_router,
+)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    ms = [PoolModel(f"m{j}", skill_for_accuracy(0.72), 1.0, seed=j) for j in range(3)]
+    y, d, logits = sample_pool_logits(ms, 4000, seed=31)
+    yt, _, logits_t = sample_pool_logits(ms, 1000, seed=32)
+    return ms, y, logits, yt, logits_t
+
+
+def test_router_learns_correctness(pool):
+    ms, y, logits, yt, logits_t = pool
+    L = jnp.asarray(logits[ms[0].name])
+    correct = np.asarray(L.argmax(-1)) == y
+    router = train_router(np.asarray(logits_features(L)), correct)
+    Lt = jnp.asarray(logits_t[ms[0].name])
+    s = np.asarray(router.score(logits_features(Lt)))
+    corr_t = np.asarray(Lt.argmax(-1)) == yt
+    # the router's score should rank correct answers above incorrect ones
+    auc_proxy = s[corr_t].mean() - s[~corr_t].mean()
+    assert auc_proxy > 0.1
+
+
+def test_router_as_deferral_rule(pool):
+    ms, y, logits, yt, logits_t = pool
+    L = jnp.asarray(logits[ms[0].name])
+    correct = np.asarray(L.argmax(-1)) == y
+    router = train_router(np.asarray(logits_features(L)), correct)
+    out = router_rule(router, jnp.asarray(logits_t[ms[0].name]), theta=0.8)
+    sel = ~np.asarray(out.defer)
+    if sel.any():
+        acc_sel = (np.asarray(out.pred)[sel] == yt[sel]).mean()
+        acc_all = (np.asarray(out.pred) == yt).mean()
+        assert acc_sel >= acc_all  # selection concentrates on correct cases
+
+
+def test_margin_rule_selects_confident(pool):
+    ms, y, logits, *_ = pool
+    out = margin_rule(jnp.asarray(logits[ms[0].name]), theta=0.5)
+    sel = ~np.asarray(out.defer)
+    acc_sel = (np.asarray(out.pred)[sel] == y[sel]).mean()
+    acc_all = (np.asarray(out.pred) == y).mean()
+    assert acc_sel > acc_all
+
+
+def test_abc_vote_competitive_with_learned_router(pool):
+    """The paper's headline: the training-free vote rule matches (or beats)
+    a per-task trained router at equal selection rate."""
+    ms, y, logits, yt, logits_t = pool
+    # ABC vote over the 3-member ensemble
+    Lte = jnp.asarray(np.stack([logits_t[m.name] for m in ms]))
+    vote = deferral.vote_rule(Lte, theta=0.5)
+    sel_v = ~np.asarray(vote.defer)
+    acc_v = (np.asarray(vote.pred)[sel_v] == yt[sel_v]).mean()
+
+    # learned router on member 0, threshold matched to the SAME selection rate
+    L = jnp.asarray(logits[ms[0].name])
+    router = train_router(
+        np.asarray(logits_features(L)), np.asarray(L.argmax(-1)) == y
+    )
+    s = np.asarray(router.score(logits_features(jnp.asarray(logits_t[ms[0].name]))))
+    theta_r = np.quantile(s, 1 - sel_v.mean())
+    sel_r = s > theta_r
+    pred_r = np.asarray(jnp.asarray(logits_t[ms[0].name]).argmax(-1))
+    acc_r = (pred_r[sel_r] == yt[sel_r]).mean()
+    assert acc_v >= acc_r - 0.03

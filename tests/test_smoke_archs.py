@@ -1,0 +1,111 @@
+"""Required per-arch smoke tests: instantiate the REDUCED variant of each
+assigned architecture (<=2 layers, d_model<=512, <=4 experts) and run one
+forward / train step on CPU asserting output shapes + no NaNs.  The FULL
+configs are exercised only via the dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, get_config, list_configs, shape_supported, INPUT_SHAPES
+from repro.models import api
+from repro.models.params import unbox
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", 64, 2, "train")
+SMOKE_PREFILL = ShapeConfig("smoke_prefill", 64, 2, "prefill")
+SMOKE_DECODE = ShapeConfig("smoke_decode", 64, 2, "decode")
+
+ARCHS = list_configs()
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            values, axes = unbox(api.init_params(cfg, jax.random.PRNGKey(0)))
+            cache[arch] = (cfg, values)
+        return cache[arch]
+
+    return get
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    fams = {get_config(a).family for a in ARCHS}
+    assert len(fams) == 6  # spanning 6 arch types
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_constraints(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, zoo):
+    cfg, values = zoo(arch)
+    batch = api.make_inputs(cfg, SMOKE_TRAIN)
+    loss, metrics = jax.jit(lambda v, b: api.loss_fn(v, b, cfg))(values, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    assert 0.0 <= float(metrics["acc"]) <= 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch, zoo):
+    cfg, values = zoo(arch)
+    batch = api.make_inputs(cfg, SMOKE_PREFILL)
+    logits = api.forward_logits(values, batch, cfg)
+    B = SMOKE_PREFILL.global_batch
+    S = SMOKE_PREFILL.seq_len - (cfg.n_vision_tokens if cfg.n_vision_tokens else 0)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_smoke(arch, zoo):
+    cfg, values = zoo(arch)
+    ok, reason = shape_supported(cfg, SMOKE_DECODE)
+    if not ok:
+        pytest.skip(reason)
+    B, S = 2, 64
+    cache_boxed = api.init_cache(cfg, B, S)
+    cache, _ = unbox(cache_boxed)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, new_cache = api.decode_step(values, tok, cache, jnp.int32(3), cfg)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    # cache structure preserved
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_matches_forward(arch, zoo):
+    cfg, values = zoo(arch)
+    batch = api.make_inputs(cfg, SMOKE_PREFILL)
+    full = api.forward_logits(values, batch, cfg)
+    last, _ = api.prefill(values, batch, cfg)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full[:, -1]), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_skip_matrix_documented():
+    """The assignment's skip matrix: hubert (encoder-only) skips decode."""
+    hubert = get_config("hubert-xlarge")
+    for name in ("decode_32k", "long_500k"):
+        ok, reason = shape_supported(hubert, INPUT_SHAPES[name])
+        assert not ok and "encoder" in reason
+    # everything else supports all four shapes
+    for arch in ARCHS:
+        if arch == "hubert-xlarge":
+            continue
+        for shape in INPUT_SHAPES.values():
+            ok, _ = shape_supported(get_config(arch), shape)
+            assert ok, (arch, shape.name)

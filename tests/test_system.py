@@ -1,0 +1,115 @@
+"""End-to-end behaviour test of the paper's system: train tier models on a
+mixture-difficulty task, calibrate the agreement threshold on ~100 samples
+(App. B), build the drop-in cascade, and verify the paper's two headline
+claims — accuracy >= the large model's (Prop 4.1.1 within epsilon) and cost
+strictly below always-using-the-large-model (Prop 4.1.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import calibration, deferral
+from repro.core import ensemble as ens
+from repro.core.cascade import TierSpec
+from repro.data.synthetic import MixtureTask
+from repro.models import api
+from repro.models.params import unbox
+from repro.optim.adamw import OptimConfig
+from repro.serve import CascadeServer, CascadeTier
+from repro.train import init_train_state, make_train_step
+
+SMALL = ModelConfig(
+    name="e2e-small", family="dense", n_layers=1, d_model=48, d_ff=96,
+    vocab_size=256, n_heads=2, n_kv_heads=2, remat=False,
+)
+BIG = ModelConfig(
+    name="e2e-big", family="dense", n_layers=2, d_model=128, d_ff=256,
+    vocab_size=256, n_heads=4, n_kv_heads=4, remat=False,
+)
+
+TASK = MixtureTask(vocab=256, n_classes=16, seq_len=32, easy_frac=0.6, seed=0)
+
+
+def _train_classifier(cfg, steps, rng_seed, lr=2e-3, n=2048, batch=64):
+    """Train last-token classification via the LM loss (label in last slot)."""
+    toks, labels, _ = TASK.sample(n, seed=rng_seed + 100)
+    values, _ = unbox(api.init_params(cfg, jax.random.PRNGKey(rng_seed)))
+    ocfg = OptimConfig(lr=lr, weight_decay=0.01)
+    state = init_train_state(values, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, total_steps=steps, warmup_steps=10))
+    rng = np.random.default_rng(rng_seed)
+    mask = np.zeros((batch, TASK.seq_len), np.float32)
+    mask[:, -1] = 1.0  # supervise only the final position
+    for i in range(steps):
+        idx = rng.integers(0, n, batch)
+        tgt = np.zeros((batch, TASK.seq_len), np.int32)
+        tgt[:, -1] = labels[idx]
+        b = {"tokens": toks[idx], "targets": tgt, "mask": mask}
+        state, m = step(state, b)
+    return state.params
+
+
+@pytest.fixture(scope="module")
+def cascade():
+    # ensemble of 3 small models (different seeds), 1 big model
+    small_params = [_train_classifier(SMALL, 250, s) for s in (0, 1, 2)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *small_params)
+    big_params = _train_classifier(BIG, 500, 7)
+    big_stacked = jax.tree.map(lambda x: x[None], big_params)
+    return stacked, big_stacked
+
+
+def _acc(preds, y):
+    return float((np.asarray(preds) == y).mean())
+
+
+def test_end_to_end_drop_in_cascade(cascade):
+    stacked, big_stacked = cascade
+    # --- calibrate theta on ~100 held-out samples (App. B) ---
+    cal_toks, cal_y, _ = TASK.sample(128, seed=999)
+    logits = ens.ensemble_last_logits(stacked, {"tokens": jnp.asarray(cal_toks)}, SMALL)
+    out = deferral.vote_rule(logits, theta=0.0)
+    theta, info = calibration.estimate_threshold(
+        np.asarray(out.score), np.asarray(out.pred) == cal_y, epsilon=0.05,
+        n_samples=100,
+    )
+
+    # --- build and run the cascade on fresh test data ---
+    test_toks, test_y, easy = TASK.sample(512, seed=1234)
+    server = CascadeServer([
+        CascadeTier(SMALL, stacked, TierSpec("small", "vote", theta, k=3, cost=1.0)),
+        CascadeTier(BIG, big_stacked, TierSpec("big", "confidence", -1.0, k=1, cost=25.0)),
+    ])
+    res = server.classify(test_toks)
+
+    big_logits = ens.ensemble_last_logits(
+        big_stacked, {"tokens": jnp.asarray(test_toks)}, BIG
+    )
+    big_pred = np.asarray(big_logits[0].argmax(-1))
+    acc_casc, acc_big = _acc(res.pred, test_y), _acc(big_pred, test_y)
+
+    # Prop 4.1.1 within the calibrated epsilon (+ sampling slack)
+    assert acc_casc >= acc_big - 0.08, (acc_casc, acc_big)
+    # Prop 4.1.2: cheaper than always-large
+    assert res.cost < 25.0 * len(test_toks), res.cost
+    # a non-trivial fraction answered at tier 1 (the task has easy structure)
+    assert res.tier_counts[0] > 0.2 * len(test_toks), res.tier_counts
+    # selected-subset accuracy is high (safe deferral in action)
+    sel = res.tier_of == 0
+    if sel.any():
+        assert _acc(res.pred[sel], test_y[sel]) >= acc_big - 0.05
+
+
+def test_easy_examples_exit_earlier(cascade):
+    stacked, big_stacked = cascade
+    test_toks, test_y, easy = TASK.sample(512, seed=4321)
+    server = CascadeServer([
+        CascadeTier(SMALL, stacked, TierSpec("small", "vote", 0.67, k=3, cost=1.0)),
+        CascadeTier(BIG, big_stacked, TierSpec("big", "confidence", -1.0, k=1, cost=25.0)),
+    ])
+    res = server.classify(test_toks)
+    exit1 = res.tier_of == 0
+    if exit1.any() and (~exit1).any():
+        # easy fraction among tier-1 exits should exceed among deferrals
+        assert easy[exit1].mean() > easy[~exit1].mean()

@@ -1,0 +1,110 @@
+"""Training loop learns; checkpoints roundtrip; schedules behave."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import TokenDataset, batches
+from repro.data.synthetic import sequence_task
+from repro.models import api
+from repro.models.params import unbox
+from repro.optim.adamw import OptimConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.train import init_train_state, make_train_step
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=64, d_ff=128,
+    vocab_size=128, n_heads=4, n_kv_heads=2, remat=False,
+)
+
+
+def test_loss_decreases():
+    """Next = prev + 1 (mod V): pure bigram structure a 2-layer model must
+    crush within 60 steps.  (The order-2 Markov `sequence_task` has
+    near-uniform unigram/bigram marginals by construction — far too little
+    signal for 30k training tokens — so it is NOT used here.)"""
+    values, _ = unbox(api.init_params(TINY, jax.random.PRNGKey(0)))
+    ocfg = OptimConfig(lr=3e-3)
+    state = init_train_state(values, ocfg)
+    step = jax.jit(make_train_step(TINY, ocfg, total_steps=60, warmup_steps=5))
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 128, (512, 1))
+    rows = ((base + np.arange(33)) % 128).astype(np.int32)
+    it = batches(TokenDataset(rows), 16)
+    losses = []
+    for i in range(60):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 1.0, losses[::10]
+
+
+def test_loss_decreases_markov_long():
+    """The order-2 Markov task DOES learn given enough steps — a slower
+    sanity check on the same pipeline (loss below the unigram floor)."""
+    values, _ = unbox(api.init_params(TINY, jax.random.PRNGKey(1)))
+    ocfg = OptimConfig(lr=3e-3)
+    state = init_train_state(values, ocfg)
+    step = jax.jit(make_train_step(TINY, ocfg, total_steps=300, warmup_steps=10))
+    rows = sequence_task(1024, 32, vocab=128, seed=0)
+    it = batches(TokenDataset(rows), 32)
+    first = last = None
+    for i in range(300):
+        state, m = step(state, next(it))
+        if i < 10:
+            first = (first or 0) + float(m["loss"]) / 10
+        if i >= 290:
+            last = (last or 0) + float(m["loss"]) / 10
+    assert last < first - 0.1, (first, last)
+
+
+def test_grad_clip_bounds_update():
+    ocfg = OptimConfig(lr=1.0, clip_norm=1e-3, weight_decay=0.0)
+    params = {"w": jnp.ones((4, 4))}
+    opt = adamw_init(params, ocfg)
+    grads = {"w": jnp.full((4, 4), 1e6)}
+    newp, _, m = adamw_update(grads, opt, params, ocfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.abs(newp["w"] - params["w"]).max()) < 1.5  # step bounded
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, 100, warmup_steps=10)) < 0.2
+    peak = float(cosine_schedule(10, 100, warmup_steps=10))
+    assert peak > 0.9
+    assert float(cosine_schedule(99, 100, warmup_steps=10)) < peak
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    values, _ = unbox(api.init_params(TINY, jax.random.PRNGKey(0)))
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 7, values)
+    assert latest_step(d) == 7
+    template = jax.tree.map(lambda v: jnp.zeros_like(v), values)
+    restored = restore_checkpoint(d, template)
+    for a, b in zip(jax.tree.leaves(values), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_bf16_preserved(tmp_path):
+    tree = {"x": jnp.arange(8, dtype=jnp.bfloat16) / 3}
+    d = str(tmp_path / "ck2")
+    save_checkpoint(d, 1, tree)
+    restored = restore_checkpoint(d, {"x": jnp.zeros(8, jnp.bfloat16)})
+    assert restored["x"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(tree["x"], np.float32), np.asarray(restored["x"], np.float32)
+    )
+
+
+def test_low_mem_moments_dtype():
+    ocfg = OptimConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params, ocfg)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    newp, newopt, _ = adamw_update({"w": jnp.ones((4,))}, opt, params, ocfg)
+    assert newopt["v"]["w"].dtype == jnp.bfloat16

@@ -1,0 +1,50 @@
+"""Verify every dry-run cell's sharded state fits v5e HBM (16 GB/chip).
+
+What a CPU-backend compile can and cannot prove:
+  * argument_bytes + output_bytes — the per-device residency of params,
+    optimizer state, caches and batch (+ the donated outputs) under the
+    chosen shardings.  This is backend-independent: it is exactly what the
+    16×16 sharding must make fit, and what this tool gates on.
+  * temp_bytes — XLA:CPU's temporary-buffer assignment.  The CPU backend
+    neither fuses nor schedules like TPU (e.g. it materializes unfused scan
+    intermediates), so temps are reported for reference only; TPU temp
+    residency is governed by the remat policy (see EXPERIMENTS.md §Dry-run).
+
+    PYTHONPATH=src python tools/check_memory_fit.py
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+HBM = 16e9
+
+
+def main():
+    bad = []
+    rows = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok" or "memory" not in r:
+            continue
+        mem = r["memory"]
+        args = mem.get("argument_bytes") or 0
+        outs = mem.get("output_bytes") or 0
+        temp = mem.get("temp_bytes") or 0
+        # donation aliases outputs onto arguments for train/decode states
+        resident = max(args, outs)
+        rows.append((r["arch"], r["shape"], r["mesh"], resident, temp))
+        if resident > HBM:
+            bad.append((r["arch"], r["shape"], r["mesh"], resident))
+    rows.sort(key=lambda t: -t[3])
+    print(f"{'arch':28s} {'shape':12s} {'mesh':12s} {'state/dev':>10s} {'cpu-temps':>10s}")
+    for a, s, m, p, t in rows[:15]:
+        flag = "  <-- OVER 16GB" if p > HBM else ""
+        print(f"{a:28s} {s:12s} {m:12s} {p/1e9:9.2f}G {t/1e9:9.1f}G{flag}")
+    print(f"\n{len(rows)} cells checked; {len(bad)} with sharded state over 16 GB/chip")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Before/after table for EXPERIMENTS.md §Perf: legacy baselines
+(experiments/perf/legacy) vs the optimized final sweep (experiments/dryrun).
+
+    PYTHONPATH=src python tools/perf_compare.py
+"""
+import glob
+import json
+import os
+
+CELLS = [
+    ("llama4-maverick-400b-a17b", "decode_32k"),
+    ("zamba2-2.7b", "decode_32k"),
+    ("mixtral-8x22b", "train_4k"),
+    ("mixtral-8x22b", "decode_32k"),
+    ("command-r-plus-104b", "decode_32k"),
+    ("qwen2.5-3b", "decode_32k"),
+]
+
+
+def get(d, arch, shape):
+    f = os.path.join(d, f"{arch}__{shape}__pod16x16.json")
+    return json.load(open(f))["roofline"]
+
+
+def ratio(a, b):
+    return f"{a/b:.1f}×" if b else "—"
+
+
+def main():
+    print("| cell | t_compute before → after | t_memory before → after | t_collective before → after |")
+    print("|---|---|---|---|")
+    for arch, shape in CELLS:
+        try:
+            b = get("experiments/perf/legacy", arch, shape)
+            a = get("experiments/dryrun", arch, shape)
+        except FileNotFoundError:
+            continue
+        def cell(key):
+            bb, aa = b[key], a[key]
+            r = f" ({bb/aa:.1f}×)" if aa and bb / max(aa, 1e-12) >= 1.05 else ""
+            return f"{bb:.3g} s → {aa:.3g} s{r}"
+        print(f"| {arch} × {shape} | {cell('t_compute_s')} | {cell('t_memory_s')} | {cell('t_collective_s')} |")
+
+
+if __name__ == "__main__":
+    main()

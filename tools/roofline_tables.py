@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python tools/roofline_tables.py [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    return f"{x:.3g}"
+
+
+def load(dirpath):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def roofline_table(recs, mesh="pod16x16"):
+    rows = [
+        "| arch | shape | bottleneck | t_compute (s) | t_memory (s) | t_collective (s) | MODEL_FLOPS | useful ratio | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("kind") == "cascade":
+            continue
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | SKIP: {r['reason']} |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | {r.get('error','')[:60]} |")
+            continue
+        t = r["roofline"]
+        note = ""
+        if r.get("window_override"):
+            note = f"SWA window={r['window_override']}"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | **{t['bottleneck']}** | {fmt_s(t['t_compute_s'])} | "
+            f"{fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} | {r['model_flops']:.3g} | "
+            f"{(r['useful_ratio'] or 0):.2f} | {note} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = [
+        "| arch | shape | mesh | status | compile (s) | per-chip FLOPs | per-chip bytes | collective bytes | state/dev | cpu-temps |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("kind") == "cascade":
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | | | | | | |"
+            )
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        state = max(mem.get("argument_bytes") or 0, mem.get("output_bytes") or 0)
+        temp = mem.get("temp_bytes") or 0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']} | "
+            f"{t['flops']:.3g} | {t['bytes']:.3g} | {t['collective_bytes']:.3g} | "
+            f"{state/1e9:.2f} GB | {temp/1e9:.0f} GB |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--which", default="roofline", choices=["roofline", "dryrun", "both"])
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.which in ("roofline", "both"):
+        print(roofline_table(recs))
+        print()
+    if args.which in ("dryrun", "both"):
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()
