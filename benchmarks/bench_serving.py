@@ -1,6 +1,11 @@
 """Serving-engine benchmark: real (reduced) models end to end — cascade
-classify throughput and per-tier routing on the mixture task (the live
-counterpart of Table 5's exit-fraction breakdown)."""
+classify/generate throughput and per-tier routing on the mixture task (the
+live counterpart of Table 5's exit-fraction breakdown).
+
+Warmup (first call, pays tracing + XLA compilation) is reported separately
+from steady-state per-batch latency: the compile-once runtime means steady
+state re-enters the jit cache with zero new traces, which this bench
+asserts via ``repro.serve.engine.trace_count``."""
 from __future__ import annotations
 
 import time
@@ -15,6 +20,7 @@ from repro.core import ensemble as ens
 from repro.core.cascade import TierSpec
 from repro.models.params import unbox
 from repro.serve import CascadeServer, CascadeTier
+from repro.serve.engine import trace_count
 
 SMALL = ModelConfig(
     name="bench-s", family="dense", n_layers=2, d_model=64, d_ff=128,
@@ -24,6 +30,18 @@ BIG = ModelConfig(
     name="bench-b", family="dense", n_layers=4, d_model=128, d_ff=256,
     vocab_size=256, n_heads=8, n_kv_heads=4, remat=False,
 )
+
+
+def _timed(fn, reps: int = 5):
+    """Returns (warmup_s, steady_s_per_call, last_result)."""
+    t0 = time.perf_counter()
+    res = fn()
+    warmup = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = fn()
+    steady = (time.perf_counter() - t0) / reps
+    return warmup, steady, res
 
 
 def run(verbose=True):
@@ -36,18 +54,27 @@ def run(verbose=True):
         CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1, cost=30.0)),
     ])
     toks = np.random.default_rng(0).integers(0, 256, (64, 32)).astype(np.int32)
-    server.classify(toks)  # warmup/compile
-    t0 = time.perf_counter()
-    reps = 5
-    for _ in range(reps):
-        res = server.classify(toks)
-    dt = (time.perf_counter() - t0) / reps
-    us = dt * 1e6
-    qps = len(toks) / dt
+
+    warm_c, steady_c, res = _timed(lambda: server.classify(toks))
+    traces_before = trace_count()
+    server.classify(toks)
+    retraced = trace_count() - traces_before
+
+    warm_g, steady_g, _ = _timed(lambda: server.generate(toks, max_new_tokens=4),
+                                 reps=3)
+
+    qps = len(toks) / steady_c
     if verbose:
-        print(f"# cascade classify: {qps:.0f} q/s, tier fractions "
+        print(f"# cascade classify: warmup {warm_c*1e3:.0f} ms (compile), "
+              f"steady {steady_c*1e3:.1f} ms/batch ({qps:.0f} q/s), "
+              f"retraces after warmup: {retraced}")
+        print(f"# cascade generate: warmup {warm_g*1e3:.0f} ms, "
+              f"steady {steady_g*1e3:.1f} ms/batch, tier fractions "
               f"{np.round(server.tier_fractions(res), 2).tolist()}")
+    assert retraced == 0, "steady-state classify must not retrace"
     return csv_row(
-        "serving_cascade_classify", us,
-        f"qps={qps:.0f};tier1_frac={server.tier_fractions(res)[0]:.2f};cost_vs_all_big={res.cost/(30.0*len(toks)):.2f}",
+        "serving_cascade_classify", steady_c * 1e6,
+        f"qps={qps:.0f};warmup_ms={warm_c*1e3:.0f};steady_ms={steady_c*1e3:.2f};"
+        f"gen_steady_ms={steady_g*1e3:.1f};tier1_frac={server.tier_fractions(res)[0]:.2f};"
+        f"cost_vs_all_big={res.cost/(30.0*len(toks)):.2f}",
     )

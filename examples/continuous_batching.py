@@ -3,6 +3,11 @@ lengths and generation budgets flows through a fixed set of decode slots;
 finished slots are refilled mid-stream.  Outputs are bit-identical to
 per-request greedy decoding (tests/test_serving.py proves it).
 
+Then the cascade-aware flavor: every tier runs its own slot stream, tiers
+are stepped round-robin, and a slot freed by tier-1 agreement admits work
+while tier-0 is still decoding — requests whose members disagree are
+re-queued on the next tier with their prompt intact.
+
     PYTHONPATH=src python examples/continuous_batching.py
 """
 import time
@@ -12,21 +17,28 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import ensemble as ens
+from repro.core.cascade import TierSpec
 from repro.models.params import unbox
-from repro.serve import Request, ServingEngine
+from repro.serve import CascadeServer, CascadeTier, Request, ServingEngine
 
 cfg = get_config("qwen2.5-3b").reduced()
-member = ens.take_member(unbox(ens.init_ensemble(cfg, 1, jax.random.PRNGKey(0)))[0], 0)
+stacked = unbox(ens.init_ensemble(cfg, 3, jax.random.PRNGKey(0)))[0]
+member = ens.take_member(stacked, 0)
 rng = np.random.default_rng(0)
 vocab = cfg.vocab_size
 
-requests = [
-    Request(
-        tokens=rng.integers(0, vocab, rng.integers(4, 20)).astype(np.int32),
-        max_new_tokens=int(rng.integers(2, 8)),
-    )
-    for _ in range(24)
-]
+
+def make_requests(n):
+    return [
+        Request(
+            tokens=rng.integers(0, vocab, rng.integers(4, 20)).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 8)),
+        )
+        for _ in range(n)
+    ]
+
+
+requests = make_requests(24)
 
 eng = ServingEngine(cfg, member, max_seq=64)
 t0 = time.perf_counter()
@@ -46,3 +58,19 @@ for r in requests:
 dt2 = time.perf_counter() - t0
 print(f"sequential per-request baseline: {dt2:.1f}s "
       f"({dt2/dt:.1f}x slower than continuous batching)")
+
+# --- cascade-aware continuous batching -------------------------------------
+big_cfg = get_config("olmo-1b").reduced()
+big1 = unbox(ens.init_ensemble(big_cfg, 1, jax.random.PRNGKey(1)))[0]
+server = CascadeServer([
+    CascadeTier(cfg, stacked, TierSpec("small-x3", "vote", 0.67, k=3, cost=1.0)),
+    CascadeTier(big_cfg, big1, TierSpec("big", "confidence", -1.0, k=1, cost=25.0)),
+])
+stream = make_requests(12)
+t0 = time.perf_counter()
+done = server.serve_continuous(stream, n_slots=4, max_seq=64)
+dt = time.perf_counter() - t0
+tiers = np.bincount([r.tier for r in done], minlength=2)
+print(f"\ncascade continuous: {len(done)} requests in {dt:.1f}s; "
+      f"answered per tier: {tiers.tolist()} "
+      f"(disagreements were re-queued onto tier 2 mid-stream)")

@@ -80,6 +80,36 @@ def cascade_apply_dense(
     return pred, tier_of, score_out
 
 
+def bucket_size(n: int, floor: int = 8) -> int:
+    """Power-of-two batch bucket (>= floor).  Used everywhere a host-routed
+    batch is padded before hitting a jitted program: bucketed shapes bound
+    the number of distinct compilations to O(log B) instead of O(B)."""
+    p = max(1, floor)
+    while p < n:
+        p *= 2
+    return p
+
+
+def bucket_chunks(n: int, floor: int = 8) -> List[int]:
+    """Greedy power-of-two decomposition of a batch of ``n`` examples into
+    bucket-shaped chunks (each a power-of-two multiple of ``floor``).
+
+    This is how deferred examples are re-batched between tiers: every chunk
+    shape comes from an O(log B) bucket set (so tier transitions re-enter
+    already-compiled programs), while total padding stays < ``2 * floor``
+    (a single covering bucket could waste ~2x the batch in padding, which
+    would show up directly in the Prop 4.1.2 cost accounting)."""
+    sizes: List[int] = []
+    rem = n
+    while rem > 0:
+        c = max(1, floor)
+        while c * 2 <= rem:
+            c *= 2
+        sizes.append(c)  # the last chunk may overshoot rem (that is padding)
+        rem -= c
+    return sizes
+
+
 def _pad_rows(x, n):
     if x.shape[0] == n:
         return x
@@ -97,9 +127,12 @@ def cascade_apply_routed(
     """Host-routed cascade with batch compaction between tiers.
 
     ``batch`` is a dict of numpy/jax arrays with a leading example axis.
-    Only deferred examples flow to the next tier (padded up to ``pad_to`` to
-    bound recompilation).  Cost accounting: spec.cost · examples evaluated
-    (the padding is charged too — that is the real serving cost).
+    Only deferred examples flow to the next tier, re-batched into greedy
+    power-of-two bucket chunks (floor ``pad_to``, see ``bucket_chunks``) so
+    tier transitions re-enter already-compiled programs instead of
+    triggering one compilation per deferred-count.  Cost accounting:
+    spec.cost · examples evaluated (the chunk padding is charged too — that
+    is the real serving cost).
     """
     B = int(jax.tree.leaves(batch)[0].shape[0])
     n = len(tier_fns)
@@ -114,15 +147,24 @@ def cascade_apply_routed(
     cur = {k: np.asarray(v) for k, v in batch.items()}
     for i, (fn, spec) in enumerate(zip(tier_fns, specs)):
         m = len(active)
-        padded = -(-m // pad_to) * pad_to
-        fed = {k: _pad_rows(v, padded) for k, v in cur.items()}
-        logits = fn(fed)
-        out = deferral.apply_rule(spec.rule, logits, spec.theta)
-        defer = np.asarray(out.defer)[:m]
-        p = np.asarray(out.pred)[:m]
-        s = np.asarray(out.score)[:m]
-        evaluated[i] = padded
-        cost += spec.cost * padded
+        defer_c, p_c, s_c = [], [], []
+        charged = 0
+        off = 0
+        for c in bucket_chunks(m, pad_to):
+            take = min(c, m - off)
+            fed = {k: _pad_rows(v[off : off + take], c) for k, v in cur.items()}
+            logits = fn(fed)
+            out = deferral.apply_rule(spec.rule, logits, spec.theta)
+            defer_c.append(np.asarray(out.defer)[:take])
+            p_c.append(np.asarray(out.pred)[:take])
+            s_c.append(np.asarray(out.score)[:take])
+            charged += c
+            off += take
+        defer = np.concatenate(defer_c)
+        p = np.concatenate(p_c)
+        s = np.concatenate(s_c)
+        evaluated[i] = charged
+        cost += spec.cost * charged
 
         last = i == n - 1
         take = ~defer | last

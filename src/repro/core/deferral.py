@@ -94,6 +94,9 @@ RULES = {
     "confidence": confidence_rule,
     "entropy": entropy_rule,
     "margin": _margin_rule,
+    # black-box Eq. 3 on member answer ids (E, B) — the serving ``generate``
+    # mode routes through this; registered here, not at call time
+    "vote_preds": vote_rule_from_preds,
 }
 
 

@@ -45,12 +45,21 @@ def ensemble_last_logits(values, batch, cfg: ModelConfig):
     return jax.vmap(one)(values)
 
 
+def ensemble_prefill(values, batch, cfg: ModelConfig):
+    """Vmapped prompt prefill for every member: the batch is shared, the
+    parameters carry the leading ensemble axis.  Returns
+    (logits (E, B, V), caches with a leading ensemble axis on every leaf)."""
+    return jax.vmap(lambda p: api.prefill(p, batch, cfg))(values)
+
+
 def ensemble_decode_step(values, token, caches, pos, cfg: ModelConfig):
-    """Vmapped decode step; caches carry a leading ensemble axis.
-    Returns (logits (E, B, V), new caches)."""
+    """Vmapped decode step; caches and per-member tokens carry a leading
+    ensemble axis (token (E, B, 1) — members diverge once they sample).
+    ``pos`` is shared (scalar or per-slot (B,) vector).  Returns
+    (logits (E, B, V), new caches)."""
     return jax.vmap(
-        lambda p, c: api.decode_step(p, token, c, pos, cfg)
-    )(values, caches)
+        lambda p, t, c: api.decode_step(p, t, c, pos, cfg)
+    )(values, token, caches)
 
 
 def member_count(values) -> int:

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import config as kcfg
+
 NEG_INF = -1e30
 
 
@@ -97,7 +99,7 @@ def member_stats_pallas(
             pltpu.VMEM((block_b, 1), jnp.int32),
             pltpu.VMEM((block_b, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kcfg.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

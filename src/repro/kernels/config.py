@@ -45,3 +45,12 @@ def use_impl(impl: str):
 def pallas_kwargs() -> dict:
     """kwargs forwarded to pl.pallas_call depending on the selected impl."""
     return {"interpret": get_impl() == "pallas_interpret"}
+
+
+def tpu_compiler_params(**kwargs):
+    """TPU compiler params across jax versions: the class was renamed
+    TPUCompilerParams -> CompilerParams; build whichever this jax has."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -9,6 +9,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core.cascade import bucket_size
+
 _ids = itertools.count()
 
 
@@ -22,11 +24,7 @@ class Request:
     tier: int = -1
 
 
-def _pow2_at_least(n: int, floor: int = 8) -> int:
-    p = floor
-    while p < n:
-        p *= 2
-    return p
+_pow2_at_least = bucket_size  # canonical bucket helper lives in core.cascade
 
 
 class RequestQueue:

@@ -1,15 +1,28 @@
 """CascadeServer: ABC as a first-class serving runtime feature.
 
-Tiers hold ensembles (stacked weights, vmapped members).  Two modes:
+Tiers hold ensembles (stacked weights, vmapped members).  Three modes:
 
 * ``classify`` — each tier's ensemble produces last-token logits; the
   agreement rule (Eq. 3/4) selects or defers; deferred examples are
   compacted and re-batched for the next tier (host routing — the form whose
   measured cost reproduces Prop 4.1.2).
 
-* ``generate`` — black-box flavor (§5.2.3): each member generates answers
-  (optionally temperature-sampled); agreement is exact-match voting over
-  canonicalized outputs (Eq. 3 with vote_rule_from_preds).
+* ``generate`` — black-box flavor (§5.2.3): every member of a tier
+  generates in ONE vmapped XLA program per decode step (stacked weights,
+  the paper's ρ=1 parallel execution); agreement is exact-match voting over
+  stable digests of the generated sequences (Eq. 3 with vote_rule_from_preds).
+
+* ``serve_continuous`` — cascade-aware continuous batching: each tier runs
+  a slot-based ensemble decode stream; a slot that finishes votes on its
+  member generations, and freed slots admit work from the tier's queue —
+  which is fed live by the *previous* tier's deferrals (tier streams are
+  stepped round-robin, so tier i+1 starts while tier i is still decoding).
+
+Compile-once discipline: all jitted programs live in a module-level cache
+keyed by (config, temperature) — building a new ``CascadeTier`` or calling
+``classify``/``generate`` repeatedly reuses the same programs, and batch
+shapes are padded to power-of-two buckets so tier transitions re-enter the
+jit cache (``repro.serve.engine.trace_count`` asserts this in the tests).
 
 Cost accounting per tier uses the TierSpec cost units (FLOPs, $/Mtok,
 GPU-$/h, comm-delay), so the same server drives all three §5.2 scenarios.
@@ -18,6 +31,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
+from collections import deque
+from types import SimpleNamespace
 from typing import List, Optional, Sequence
 
 import jax
@@ -27,7 +43,87 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import deferral, ensemble as ens
 from repro.core.cascade import CascadeResult, TierSpec, cascade_apply_routed
-from repro.serve.engine import ServingEngine
+from repro.models import api
+from repro.serve.batching import Request
+from repro.serve.engine import _counted, grow_cache
+
+
+# ---------------------------------------------------------------------------
+# stable canonicalization of generations (black-box voting)
+# ---------------------------------------------------------------------------
+
+
+def stable_digest(tokens) -> int:
+    """PYTHONHASHSEED-independent canonical id for a token sequence.
+
+    ``hash(bytes)`` is salted per process, which made identical member
+    generations vote differently across runs; crc32 over the little-endian
+    int32 encoding is deterministic everywhere.  Masked to 30 bits so every
+    digest stays strictly below ``vote_rule_from_preds``'s 2**30
+    not-a-candidate sentinel (a 31-bit digest could BE the sentinel and
+    corrupt the majority-id tie-break)."""
+    row = np.ascontiguousarray(np.asarray(tokens, np.int32)).astype("<i4")
+    return zlib.crc32(row.tobytes()) & 0x3FFFFFFF
+
+
+def digest_generations(out: np.ndarray) -> np.ndarray:
+    """(E, B, T) member generations -> (E, B) int32 canonical answer ids."""
+    E, B = out.shape[:2]
+    return np.asarray(
+        [[stable_digest(out[e, b]) for b in range(B)] for e in range(E)],
+        np.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# compile-once ensemble programs
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
+    """Long-lived jitted ensemble programs for one (config, temperature).
+
+    ``last_logits(values, batch) -> (E, B, V)``
+    ``prefill(values, batch, rng) -> (tok (E, B, 1), caches, rng)``
+    ``decode(values, tok, caches, pos, rng) -> (tok (E, B, 1), caches, rng)``
+
+    Sampling lives inside the programs (one XLA program advances every
+    member of the tier per step); ``pos`` may be a scalar (batch mode) or a
+    per-slot (B,) vector (continuous mode) — each shape traces once.
+    """
+
+    def _sample(logits, rng):  # logits (E, B, V)
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), rng
+        rng, sub = jax.random.split(rng)
+        keys = jax.random.split(sub, logits.shape[0])
+        tok = jax.vmap(
+            lambda k, l: jax.random.categorical(k, l / temperature)
+        )(keys, logits)
+        return tok.astype(jnp.int32), rng
+
+    def prefill(values, batch, rng):
+        logits, caches = ens.ensemble_prefill(values, batch, cfg)
+        tok, rng = _sample(logits, rng)
+        return tok[..., None], caches, rng
+
+    def decode(values, tok, caches, pos, rng):
+        logits, caches = ens.ensemble_decode_step(values, tok, caches, pos, cfg)
+        nxt, rng = _sample(logits, rng)
+        return nxt[..., None], caches, rng
+
+    key = f"{cfg.name}@T{temperature:g}"
+    return SimpleNamespace(
+        last_logits=jax.jit(
+            _counted(
+                f"{key}/ens_last_logits",
+                functools.partial(ens.ensemble_last_logits, cfg=cfg),
+            )
+        ),
+        prefill=jax.jit(_counted(f"{key}/ens_prefill", prefill)),
+        decode=jax.jit(_counted(f"{key}/ens_decode", decode)),
+    )
 
 
 @dataclasses.dataclass
@@ -39,12 +135,119 @@ class CascadeTier:
 
     def __post_init__(self):
         self.k = ens.member_count(self.values)
-        self._last_logits = jax.jit(
-            functools.partial(ens.ensemble_last_logits, cfg=self.cfg)
-        )
+        programs = tier_programs(self.cfg, float(self.temperature))
+        self._last_logits = programs.last_logits
+        self._prefill = programs.prefill
+        self._decode = programs.decode
 
-    def member_engine(self, i: int, **kw) -> ServingEngine:
-        return ServingEngine(self.cfg, ens.take_member(self.values, i), **kw)
+    def generate(
+        self, tokens: np.ndarray, max_new_tokens: int, seed: int = 0
+    ) -> np.ndarray:
+        """Ensemble generation: tokens (B, S) -> (E, B, max_new).  Every
+        decode step is one vmapped XLA program over the stacked (E, ...)
+        parameters — no per-member Python loop, no per-member engines."""
+        assert max_new_tokens >= 1, max_new_tokens
+        B, S = tokens.shape
+        rng = jax.random.PRNGKey(seed)
+        tok, caches, rng = self._prefill(
+            self.values, {"tokens": jnp.asarray(tokens)}, rng
+        )
+        caches = grow_cache(caches, max_new_tokens, self.cfg, lead=1)
+        out = [np.asarray(tok)[..., 0]]
+        for t in range(max_new_tokens - 1):
+            tok, caches, rng = self._decode(
+                self.values, tok, caches, jnp.int32(S + t), rng
+            )
+            out.append(np.asarray(tok)[..., 0])
+        return np.stack(out, axis=2)  # (E, B, T)
+
+
+# ---------------------------------------------------------------------------
+# per-tier continuous decode stream (cascade-aware continuous batching)
+# ---------------------------------------------------------------------------
+
+
+class _TierStream:
+    """Slot-based ensemble decode for one tier.  Admission is decode-only
+    (prompts are fed token-by-token through the same program, so shapes are
+    uniform); a freed slot immediately admits from ``self.queue`` — which
+    the previous tier's voting feeds live with its deferrals."""
+
+    def __init__(self, tier: CascadeTier, index: int, *, n_slots: int,
+                 max_seq: int, seed: int):
+        assert tier.cfg.family in ("dense", "moe", "vlm"), (
+            "cascade continuous batching needs pos-masked slot reuse; "
+            "constant-state families would leak state across admissions"
+        )
+        self.tier = tier
+        self.index = index
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.queue: deque = deque()
+        self.rng = jax.random.PRNGKey(seed)
+        E = tier.k
+        cache0 = api.init_cache(tier.cfg, n_slots, max_seq)
+        values0 = jax.tree.map(lambda b: b.value, cache0,
+                               is_leaf=lambda x: hasattr(x, "axes"))
+        self.caches = jax.tree.map(
+            lambda v: jnp.zeros((E,) + v.shape, v.dtype), values0
+        )
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_consumed = np.zeros(n_slots, np.int64)
+        self.slot_emitted: List[List[np.ndarray]] = [[] for _ in range(n_slots)]
+        self.pos = np.zeros(n_slots, np.int32)
+        self.tok = np.zeros((E, n_slots, 1), np.int32)
+        self.steps = 0
+
+    def _admit(self, s: int):
+        if not self.queue:
+            self.slot_req[s] = None
+            return
+        r = self.queue.popleft()
+        self.slot_req[s] = r
+        self.slot_consumed[s] = 1
+        self.slot_emitted[s] = []
+        self.pos[s] = 0
+        self.tok[:, s, 0] = r.tokens[0]
+
+    def refill(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                self._admit(s)
+
+    @property
+    def active(self) -> bool:
+        return any(r is not None for r in self.slot_req) or bool(self.queue)
+
+    def step(self) -> List[tuple]:
+        """One vmapped decode step for every slot; returns the list of
+        (request, member_generations (E, T)) that completed this step."""
+        self.refill()
+        if not any(r is not None for r in self.slot_req):
+            return []
+        tok, self.caches, self.rng = self.tier._decode(
+            self.tier.values, jnp.asarray(self.tok), self.caches,
+            jnp.asarray(self.pos), self.rng,
+        )
+        nxt = np.asarray(tok)[..., 0]  # (E, n_slots)
+        self.steps += 1
+        completed = []
+        for s, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            self.pos[s] += 1
+            if self.slot_consumed[s] < len(r.tokens):
+                self.tok[:, s, 0] = r.tokens[self.slot_consumed[s]]
+                self.slot_consumed[s] += 1
+            else:
+                self.slot_emitted[s].append(nxt[:, s].copy())
+                self.tok[:, s, 0] = nxt[:, s]
+                if (len(self.slot_emitted[s]) >= r.max_new_tokens
+                        or self.pos[s] >= self.max_seq - 1):
+                    gen = np.stack(self.slot_emitted[s], axis=1)  # (E, T)
+                    completed.append((r, gen))
+                    self._admit(s)
+        return completed
 
 
 class CascadeServer:
@@ -58,7 +261,9 @@ class CascadeServer:
 
         def tier_fn(tier: CascadeTier):
             def fn(batch):
-                return tier._last_logits(tier.values, {"tokens": jnp.asarray(batch["tokens"])})
+                return tier._last_logits(
+                    tier.values, {"tokens": jnp.asarray(batch["tokens"])}
+                )
 
             return fn
 
@@ -70,40 +275,73 @@ class CascadeServer:
     def generate(
         self, tokens: np.ndarray, max_new_tokens: int = 8, seed: int = 0
     ) -> CascadeResult:
-        """Each member generates; members' answers are hashed to ids and
-        vote-compared (the paper's API scenario where only text comes back).
-        """
+        """Each tier's members generate in one vmapped program; answers are
+        digested to stable ids and vote-compared (the paper's API scenario
+        where only text comes back)."""
 
         def tier_fn(tier: CascadeTier):
             def fn(batch):
                 toks = np.asarray(batch["tokens"])
-                preds = []
-                for i in range(tier.k):
-                    eng = tier.member_engine(
-                        i, temperature=tier.temperature, seed=seed + i
-                    )
-                    out = eng.generate(toks, max_new_tokens)  # (B, T)
-                    # canonicalize: hash the generated id sequence
-                    h = np.asarray(
-                        [hash(bytes(row.tobytes())) % (2**31 - 1) for row in out],
-                        np.int32,
-                    )
-                    preds.append(h)
-                return jnp.asarray(np.stack(preds))  # (E, B) ids
+                out = tier.generate(toks, max_new_tokens, seed=seed)
+                return jnp.asarray(digest_generations(out))  # (E, B) ids
 
             return fn
 
-        # vote_rule_from_preds via a rule shim: reuse 'vote' on preds
-        def shim(spec: TierSpec):
-            return dataclasses.replace(spec, rule="vote_preds")
-
-        deferral.RULES.setdefault(
-            "vote_preds",
-            lambda preds, theta: deferral.vote_rule_from_preds(preds, theta),
-        )
         fns = [tier_fn(t) for t in self.tiers]
-        specs = [shim(t.spec) for t in self.tiers]
+        specs = [dataclasses.replace(t.spec, rule="vote_preds") for t in self.tiers]
         return cascade_apply_routed(fns, specs, {"tokens": tokens}, pad_to=self.pad_to)
+
+    # -- cascade-aware continuous batching ---------------------------------
+    def serve_continuous(
+        self,
+        requests: Sequence[Request],
+        *,
+        n_slots: int = 8,
+        max_seq: int = 256,
+        seed: int = 0,
+    ) -> List[Request]:
+        """Continuous-batching generate mode: every tier runs a slot-based
+        ensemble decode stream; streams are stepped round-robin, so a
+        request deferred by tier i is admitted into a freed tier-i+1 slot
+        while tier i is still decoding its remaining slots.  A completed
+        slot votes over its member generations (Eq. 3 on stable digests):
+        agreement -> the request exits with the majority answer and
+        ``r.tier`` set; disagreement -> the request is re-queued (prompt
+        intact) on the next tier.  Returns completed requests."""
+        for r in requests:
+            assert len(r.tokens) + r.max_new_tokens <= max_seq, (
+                f"request {r.rid}: prompt+budget "
+                f"{len(r.tokens)}+{r.max_new_tokens} exceeds max_seq={max_seq}"
+            )
+        streams = [
+            _TierStream(t, i, n_slots=n_slots, max_seq=max_seq, seed=seed + i)
+            for i, t in enumerate(self.tiers)
+        ]
+        streams[0].queue.extend(requests)
+        done: List[Request] = []
+        n_tiers = len(streams)
+
+        while any(st.active for st in streams):
+            for i, st in enumerate(streams):
+                for r, gen in st.step():
+                    digests = np.asarray(
+                        [stable_digest(gen[e]) for e in range(st.tier.k)],
+                        np.int32,
+                    )
+                    out = deferral.vote_rule_from_preds(
+                        jnp.asarray(digests[:, None]), st.tier.spec.theta
+                    )
+                    defer = bool(np.asarray(out.defer)[0]) and i < n_tiers - 1
+                    if defer:
+                        streams[i + 1].queue.append(r)
+                    else:
+                        winner = int(
+                            np.argmax(digests == int(np.asarray(out.pred)[0]))
+                        )
+                        r.output = np.asarray(gen[winner], np.int32)
+                        r.tier = i
+                        done.append(r)
+        return done
 
     # -- accounting ---------------------------------------------------------
     def expected_cost(self, result: CascadeResult) -> float:

@@ -1,14 +1,23 @@
-"""Single-model serving engine: jitted prefill + decode loop.
+"""Single-model serving engine: persistent jitted prefill + decode programs.
 
 Prompts in a batch are padded to a common length (left-aligned padding is
 prepended so the *ends* of all prompts coincide — the causal mask then makes
 pad tokens only able to pollute other pads' cache rows, not real tokens'
 futures; per-request attention masks are a noted production extension).
+
+Compile-once discipline: every jitted program lives in a module-level cache
+keyed by the (hashable, frozen) ``ModelConfig`` — constructing a new
+``ServingEngine`` (or ``CascadeTier``) for a config that has already served
+traffic reuses the existing programs and their jit caches.  Each program
+body bumps a trace counter as a Python side effect, which only runs when
+jax actually (re)traces — ``trace_count()`` therefore measures compilations,
+and the serving tests assert it stays flat across repeated same-shape calls.
 """
 from __future__ import annotations
 
-import dataclasses
+import collections
 import functools
+from types import SimpleNamespace
 from typing import List, Optional
 
 import jax
@@ -18,6 +27,77 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.serve.batching import Request, RequestQueue
+
+# ---------------------------------------------------------------------------
+# compile-once program cache + trace accounting
+# ---------------------------------------------------------------------------
+
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def trace_count(key: Optional[str] = None) -> int:
+    """Total number of traces (= compilations) across all serving programs,
+    or for one ``"<cfg.name>/<program>"`` key."""
+    if key is None:
+        return sum(_TRACE_COUNTS.values())
+    return _TRACE_COUNTS[key]
+
+
+def trace_counts() -> dict:
+    return dict(_TRACE_COUNTS)
+
+
+def _counted(key: str, fn):
+    """Wrap ``fn`` so every jax trace of it bumps ``_TRACE_COUNTS[key]``.
+    The increment is a host side effect inside the traced body: it fires
+    exactly once per (re)trace and never during cached executions."""
+
+    def wrapped(*args, **kw):
+        _TRACE_COUNTS[key] += 1
+        return fn(*args, **kw)
+
+    return wrapped
+
+
+@functools.lru_cache(maxsize=None)
+def model_programs(cfg: ModelConfig) -> SimpleNamespace:
+    """Long-lived jitted prefill/decode programs for one model config."""
+    prefill = jax.jit(
+        _counted(f"{cfg.name}/prefill", functools.partial(api.prefill, cfg=cfg))
+    )
+    decode = jax.jit(
+        _counted(f"{cfg.name}/decode", functools.partial(api.decode_step, cfg=cfg))
+    )
+    return SimpleNamespace(prefill=prefill, decode=decode)
+
+
+def grow_cache(cache, pad: int, cfg: ModelConfig, *, lead: int = 0):
+    """Pad the sequence axis of an attention KV cache by ``pad`` positions.
+
+    ``lead`` counts extra leading axes before the canonical cache layout
+    (1 for stacked-ensemble caches).  SSM/RWKV state is constant-size, so
+    those families are a no-op.
+    """
+    if pad <= 0:
+        return cache
+    if cfg.family in ("dense", "moe", "vlm"):
+        # (L, B, KVH, S, hd): sequence axis 3 (+lead)
+        ax = 3 + lead
+        return {
+            k: jnp.pad(v, [(0, pad) if i == ax else (0, 0) for i in range(v.ndim)])
+            for k, v in cache.items()
+        }
+    if cfg.family == "hybrid":
+        # per-invocation leaves: (B, KVH, S, hd) — sequence axis 2 (+lead)
+        ax = 2 + lead
+        cache = dict(cache)
+        for k in ("attn_k", "attn_v"):
+            cache[k] = [
+                jnp.pad(c, [(0, pad) if i == ax else (0, 0) for i in range(c.ndim)])
+                for c in cache[k]
+            ]
+        return cache
+    return cache  # constant-state families (ssm_mamba2, ssm_rwkv6)
 
 
 class ServingEngine:
@@ -38,8 +118,9 @@ class ServingEngine:
         self.temperature = temperature
         self._rng = jax.random.PRNGKey(seed)
         self.queue = RequestQueue(max_batch=max_batch)
-        self._prefill = jax.jit(functools.partial(api.prefill, cfg=cfg))
-        self._decode = jax.jit(functools.partial(api.decode_step, cfg=cfg))
+        programs = model_programs(cfg)
+        self._prefill = programs.prefill
+        self._decode = programs.decode
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "batches": 0}
 
     # -- low-level --------------------------------------------------------
@@ -61,25 +142,7 @@ class ServingEngine:
         total = S + max_new_tokens
         logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
         self.stats["prefill_tokens"] += tokens.size
-        # grow the kv cache to the full generation length
-        # cache layout is (L/inv, B, KVH, S, hd) — pad the sequence axis (3)
-        if self.cfg.family in ("dense", "moe", "vlm"):
-            pad = total - cache["k"].shape[3]
-            if pad > 0:
-                cache = {
-                    k2: jnp.pad(v2, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
-                    for k2, v2 in cache.items()
-                }
-        elif self.cfg.family == "hybrid":
-            # per-invocation caches: list of (B, K, S, hd)
-            pad = total - cache["attn_k"][0].shape[2]
-            if pad > 0:
-                cache = dict(cache)
-                for k2 in ("attn_k", "attn_v"):
-                    cache[k2] = [
-                        jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0)))
-                        for c in cache[k2]
-                    ]
+        cache = grow_cache(cache, total - S, self.cfg)
         out = []
         tok = self._sample(logits)[:, None]
         for t in range(max_new_tokens):
@@ -103,10 +166,9 @@ class ServingEngine:
         are admitted into freed slots mid-stream; their prompts are
         consumed through the same decode program (decode-only admission —
         uniform shapes, one compiled program; chunked prefill admission is
-        the production extension).  Returns the completed requests."""
-        from repro.models import api
-        from repro.models.params import unbox as _unbox
-
+        the production extension).  Repeated invocations reuse the
+        module-level jitted decode — nothing is re-jitted per call.
+        Returns the completed requests."""
         cfg = self.cfg
         assert not cfg.is_encoder
         if max_seq is None:
@@ -114,7 +176,6 @@ class ServingEngine:
         cache_boxed = api.init_cache(cfg, n_slots, max_seq)
         cache = jax.tree.map(lambda b: b.value, cache_boxed,
                              is_leaf=lambda x: hasattr(x, "axes"))
-        decode = jax.jit(functools.partial(api.decode_step, cfg=cfg))
 
         queue = list(requests)
         done: List[Request] = []
@@ -139,7 +200,7 @@ class ServingEngine:
             admit(s)
 
         while any(r is not None for r in slot_req):
-            logits, cache = decode(
+            logits, cache = self._decode(
                 self.params, jnp.asarray(tok), cache, jnp.asarray(pos)
             )
             nxt = np.asarray(self._sample(logits))

@@ -1,0 +1,139 @@
+"""Compile-once serving runtime: repeated same-shape calls must re-enter
+the jit cache with ZERO new traces, and the vmapped generation path must be
+semantically identical to per-member generation and to the dense cascade."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import ensemble as ens
+from repro.core.cascade import TierSpec, cascade_apply_dense, cascade_apply_routed
+from repro.models.params import unbox
+from repro.serve import CascadeServer, CascadeTier, Request, ServingEngine
+from repro.serve.cascade_server import digest_generations
+from repro.serve.engine import model_programs, trace_count
+
+SMALL = ModelConfig(
+    name="reuse-s", family="dense", n_layers=2, d_model=64, d_ff=128,
+    vocab_size=64, n_heads=4, n_kv_heads=2, remat=False,
+)
+BIG = ModelConfig(
+    name="reuse-b", family="dense", n_layers=3, d_model=96, d_ff=192,
+    vocab_size=64, n_heads=4, n_kv_heads=4, remat=False,
+)
+
+
+@pytest.fixture(scope="module")
+def server():
+    v1, _ = unbox(ens.init_ensemble(SMALL, 3, jax.random.PRNGKey(0)))
+    v2, _ = unbox(ens.init_ensemble(BIG, 1, jax.random.PRNGKey(1)))
+    return CascadeServer([
+        CascadeTier(SMALL, v1, TierSpec("t1", "vote", 0.67, k=3, cost=1.0)),
+        CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1, cost=50.0)),
+    ])
+
+
+def test_classify_zero_retrace_after_warmup(server):
+    toks = np.random.default_rng(0).integers(0, 64, (16, 12)).astype(np.int32)
+    server.classify(toks)  # warmup: traces (tier transitions included)
+    before = trace_count()
+    r1 = server.classify(toks)
+    r2 = server.classify(toks)
+    assert trace_count() == before, "same-shape classify must not retrace"
+    np.testing.assert_array_equal(r1.pred, r2.pred)
+
+
+def test_generate_zero_retrace_after_warmup(server):
+    toks = np.random.default_rng(1).integers(0, 64, (8, 10)).astype(np.int32)
+    server.generate(toks, max_new_tokens=3)  # warmup
+    before = trace_count()
+    r1 = server.generate(toks, max_new_tokens=3)
+    r2 = server.generate(toks, max_new_tokens=3)
+    assert trace_count() == before, "same-shape generate must not retrace"
+    np.testing.assert_array_equal(r1.pred, r2.pred)
+    np.testing.assert_array_equal(r1.tier_of, r2.tier_of)
+
+
+def test_engine_programs_shared_across_instances():
+    """Two engines for the same config share one jitted program object —
+    a fresh engine never recompiles what a previous one already traced."""
+    v, _ = unbox(ens.init_ensemble(SMALL, 1, jax.random.PRNGKey(2)))
+    member = ens.take_member(v, 0)
+    e1 = ServingEngine(SMALL, member)
+    e2 = ServingEngine(SMALL, member)
+    assert e1._prefill is e2._prefill and e1._decode is e2._decode
+    assert e1._prefill is model_programs(SMALL).prefill
+
+
+def test_serve_continuous_no_rejit():
+    v, _ = unbox(ens.init_ensemble(SMALL, 1, jax.random.PRNGKey(3)))
+    eng = ServingEngine(SMALL, ens.take_member(v, 0), max_seq=64)
+    rng = np.random.default_rng(4)
+
+    def reqs():
+        return [
+            Request(tokens=rng.integers(0, 64, 6).astype(np.int32),
+                    max_new_tokens=3)
+            for _ in range(5)
+        ]
+
+    eng.serve_continuous(reqs(), n_slots=4)  # warmup
+    before = trace_count()
+    done = eng.serve_continuous(reqs(), n_slots=4)
+    assert len(done) == 5
+    assert trace_count() == before, "serve_continuous must reuse its decode program"
+
+
+def test_routed_equals_dense_on_vmapped_generation(server):
+    """The routed (deployment) cascade and the dense (reference) cascade
+    agree on every prediction/tier when both consume the vmapped ensemble
+    generation digests."""
+    toks = np.random.default_rng(5).integers(0, 64, (8, 10)).astype(np.int32)
+    digests = [
+        jnp.asarray(digest_generations(t.generate(toks, 4, seed=0)))
+        for t in server.tiers
+    ]
+
+    # index-routed fns so the routed form's compaction picks matching rows
+    fns = [lambda batch, D=D: D[:, batch["idx"]] for D in digests]
+    specs = [
+        TierSpec("t1", "vote_preds", 0.67, k=3, cost=1.0),
+        TierSpec("t2", "vote_preds", -1.0, k=1, cost=50.0),
+    ]
+    idx = np.arange(toks.shape[0])
+    pred_d, tier_d, _ = cascade_apply_dense(fns, specs, {"idx": idx})
+    res = cascade_apply_routed(fns, specs, {"idx": idx}, pad_to=4)
+    np.testing.assert_array_equal(np.asarray(pred_d), res.pred)
+    np.testing.assert_array_equal(np.asarray(tier_d), res.tier_of)
+
+
+def test_vmapped_generation_matches_member_engines(server):
+    """Each member's row of the one-program vmapped generation is
+    bit-identical to that member generating alone (greedy)."""
+    tier = server.tiers[0]
+    toks = np.random.default_rng(6).integers(0, 64, (4, 8)).astype(np.int32)
+    out = tier.generate(toks, max_new_tokens=4)  # (E, B, T)
+    assert out.shape == (3, 4, 4)
+    for i in range(tier.k):
+        eng = ServingEngine(SMALL, ens.take_member(tier.values, i))
+        ref = eng.generate(toks, max_new_tokens=4)
+        np.testing.assert_array_equal(out[i], ref)
+
+
+def test_cascade_continuous_matches_batch_generate(server):
+    """Cascade-aware continuous batching (slot streams + live deferral
+    admission) routes and answers exactly like the batch generate mode for
+    equal-length, equal-budget requests."""
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(0, 64, (6, 8)).astype(np.int32)
+    reqs = [Request(tokens=p.copy(), max_new_tokens=4) for p in prompts]
+    done = server.serve_continuous(reqs, n_slots=3, max_seq=32)
+    assert len(done) == 6
+    by_rid = {r.rid: r for r in done}
+
+    res = server.generate(prompts, max_new_tokens=4, seed=0)
+    for i, r in enumerate(reqs):
+        d = by_rid[r.rid]
+        assert d.tier == res.tier_of[i]
+        assert d.output is not None and len(d.output) == 4

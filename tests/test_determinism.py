@@ -1,0 +1,97 @@
+"""Black-box voting must be reproducible: generation digests (and therefore
+routing and cost numbers) may not depend on PYTHONHASHSEED or any other
+per-process salt."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.serve.cascade_server import digest_generations, stable_digest
+
+_SCRIPT = r"""
+import json
+import jax
+import numpy as np
+from repro.configs.base import ModelConfig
+from repro.core import ensemble as ens
+from repro.core.cascade import TierSpec
+from repro.models.params import unbox
+from repro.serve import CascadeServer, CascadeTier
+
+SMALL = ModelConfig(name="det-s", family="dense", n_layers=1, d_model=32,
+                    d_ff=64, vocab_size=32, n_heads=2, n_kv_heads=2, remat=False)
+BIG = ModelConfig(name="det-b", family="dense", n_layers=1, d_model=48,
+                  d_ff=96, vocab_size=32, n_heads=2, n_kv_heads=2, remat=False)
+v1, _ = unbox(ens.init_ensemble(SMALL, 3, jax.random.PRNGKey(0)))
+v2, _ = unbox(ens.init_ensemble(BIG, 1, jax.random.PRNGKey(1)))
+server = CascadeServer([
+    CascadeTier(SMALL, v1, TierSpec("t1", "vote", 0.67, k=3, cost=1.0)),
+    CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1, cost=50.0)),
+])
+toks = np.random.default_rng(2).integers(0, 32, (6, 8)).astype(np.int32)
+res = server.generate(toks, max_new_tokens=3)
+print(json.dumps({"pred": res.pred.tolist(), "tier_of": res.tier_of.tolist(),
+                  "cost": res.cost}))
+"""
+
+
+def _run(hashseed: str) -> dict:
+    env = dict(os.environ, PYTHONHASHSEED=hashseed)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(os.path.dirname(__file__), "..", "src"),
+                    env.get("PYTHONPATH")) if p
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600, check=True,
+    )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_stable_digest_is_not_salted():
+    # fixed expected value: crc32 of little-endian int32 bytes, masked
+    assert stable_digest(np.asarray([1, 2, 3], np.int32)) == 0x30E02293
+    # dtype/layout canonicalization: int64 input digests identically
+    a = np.asarray([5, 7, 11], np.int64)
+    assert stable_digest(a) == stable_digest(a.astype(np.int32))
+
+
+def test_digest_range_below_vote_sentinel():
+    """vote_rule_from_preds tie-breaks via a 2**30 'not a candidate'
+    sentinel; a digest >= 2**30 would BE the sentinel and the voted pred
+    would match no member (regression: 31-bit digests silently elected
+    member 0).  Digests must stay strictly below, and a majority at the
+    top of the range must win the vote."""
+    import jax.numpy as jnp
+
+    from repro.core.deferral import vote_rule_from_preds
+
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        assert stable_digest(rng.integers(0, 1 << 20, 8)) < 2**30
+    top = (1 << 30) - 1  # max possible digest
+    preds = jnp.asarray([[top], [top], [0x123]], jnp.int32)
+    out = vote_rule_from_preds(preds, 0.5)
+    assert int(out.pred[0]) == top
+
+
+def test_digest_generations_shape_and_collision_freedom():
+    rng = np.random.default_rng(0)
+    out = rng.integers(0, 64, (3, 5, 4)).astype(np.int32)
+    d = digest_generations(out)
+    assert d.shape == (3, 5) and d.dtype == np.int32 and (d >= 0).all()
+    # identical generations -> identical ids (that is what voting counts)
+    out[1] = out[0]
+    d = digest_generations(out)
+    np.testing.assert_array_equal(d[0], d[1])
+
+
+def test_generate_routing_identical_across_fresh_processes():
+    """The regression the ISSUE names: `hash(bytes)` salting made the same
+    member generations vote differently per process.  Two fresh interpreters
+    with different PYTHONHASHSEED must produce bit-identical routing."""
+    a = _run("0")
+    b = _run("12345")
+    assert a == b

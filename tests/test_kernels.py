@@ -12,7 +12,10 @@ from repro.kernels.flash_attention import ops as flash_ops, ref as flash_ref
 from repro.kernels.mamba2_ssd import ops as ssd_ops, ref as ssd_ref
 from repro.kernels.rwkv6_wkv import ops as wkv_ops, ref as wkv_ref
 
-IMPLS = ["xla", "pallas_interpret"]
+# interpret-mode Pallas runs execute the kernel body in Python on CPU and
+# take many minutes across the sweeps — marked slow, excluded from tier 1
+# (pyproject.toml addopts); run them with `pytest -m slow` or `-m ""`.
+IMPLS = ["xla", pytest.param("pallas_interpret", marks=pytest.mark.slow)]
 
 
 def _tol(dtype):
