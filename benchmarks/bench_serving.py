@@ -8,6 +8,7 @@ state re-enters the jit cache with zero new traces, which this bench
 asserts via ``repro.serve.engine.trace_count``."""
 from __future__ import annotations
 
+import math
 import time
 
 import jax
@@ -19,7 +20,7 @@ from repro.configs.base import ModelConfig
 from repro.core import ensemble as ens
 from repro.core.cascade import TierSpec
 from repro.models.params import unbox
-from repro.serve import CascadeServer, CascadeTier
+from repro.serve import CascadeServer, CascadeTier, Request, ServingEngine
 from repro.serve.engine import trace_count
 
 SMALL = ModelConfig(
@@ -63,6 +64,51 @@ def run(verbose=True):
     warm_g, steady_g, _ = _timed(lambda: server.generate(toks, max_new_tokens=4),
                                  reps=3)
 
+    # --- prompt-admission latency (SlotStream chunked prefill) -------------
+    # a 256-token prompt must admit in <= ceil(log2(256)) bucketed prefill
+    # calls — not 256 decode-feed steps — with zero steady-state retraces
+    P, n_admit = 256, 4
+    eng = ServingEngine(SMALL, one, max_seq=512)
+    rng = np.random.default_rng(1)
+
+    def admit_reqs():
+        return [
+            Request(tokens=rng.integers(0, 256, P).astype(np.int32),
+                    max_new_tokens=4)
+            for _ in range(n_admit)
+        ]
+
+    eng.serve_continuous(admit_reqs(), n_slots=n_admit)  # warmup (buckets trace)
+    before = trace_count()
+    t0 = time.perf_counter()
+    eng.serve_continuous(admit_reqs(), n_slots=n_admit)
+    chunk_wall = time.perf_counter() - t0
+    admission_retraces = trace_count() - before
+    st = eng.last_stream_stats
+    calls_per_admit = st["chunk_calls"] / st["admitted"]
+
+    # true device-side admission latency: dispatch is async, so time a lone
+    # admission with an explicit block on the slot cache (first rep compiles
+    # the n_slots=1 bucket programs, second measures steady state)
+    for _ in range(2):
+        stream = eng.slot_stream(n_slots=1)
+        stream.submit(admit_reqs()[:1])
+        t0 = time.perf_counter()
+        stream.refill()
+        jax.block_until_ready(stream.backend.cache)
+        admit_ms = (time.perf_counter() - t0) * 1e3
+
+    eng.serve_continuous(admit_reqs(), n_slots=n_admit,
+                         chunked_prefill=False)  # decode-feed warmup
+    t0 = time.perf_counter()
+    eng.serve_continuous(admit_reqs(), n_slots=n_admit, chunked_prefill=False)
+    plain_wall = time.perf_counter() - t0
+
+    assert admission_retraces == 0, "steady-state chunked admission must not retrace"
+    assert calls_per_admit <= math.ceil(math.log2(P)), (
+        f"{P}-token prompt took {calls_per_admit} bucket calls"
+    )
+
     qps = len(toks) / steady_c
     if verbose:
         print(f"# cascade classify: warmup {warm_c*1e3:.0f} ms (compile), "
@@ -71,10 +117,18 @@ def run(verbose=True):
         print(f"# cascade generate: warmup {warm_g*1e3:.0f} ms, "
               f"steady {steady_g*1e3:.1f} ms/batch, tier fractions "
               f"{np.round(server.tier_fractions(res), 2).tolist()}")
+        print(f"# chunked admission: {P}-token prompt in {calls_per_admit:.0f} "
+              f"bucket calls (ceil(log2)={math.ceil(math.log2(P))}; decode-feed "
+              f"= {P-1} steps), {admit_ms:.1f} ms/admission, "
+              f"retraces {admission_retraces}; serve wall "
+              f"{chunk_wall:.2f}s chunked vs {plain_wall:.2f}s decode-only "
+              f"({plain_wall/chunk_wall:.1f}x)")
     assert retraced == 0, "steady-state classify must not retrace"
     return csv_row(
         "serving_cascade_classify", steady_c * 1e6,
         f"qps={qps:.0f};warmup_ms={warm_c*1e3:.0f};steady_ms={steady_c*1e3:.2f};"
         f"gen_steady_ms={steady_g*1e3:.1f};tier1_frac={server.tier_fractions(res)[0]:.2f};"
-        f"cost_vs_all_big={res.cost/(30.0*len(toks)):.2f}",
+        f"cost_vs_all_big={res.cost/(30.0*len(toks)):.2f};"
+        f"admit_calls_per_{P}tok={calls_per_admit:.0f};admit_ms={admit_ms:.1f};"
+        f"admit_speedup_vs_decode_feed={plain_wall/chunk_wall:.1f}",
     )

@@ -1,12 +1,18 @@
 """Continuous batching demo: a stream of requests with different prompt
-lengths and generation budgets flows through a fixed set of decode slots;
-finished slots are refilled mid-stream.  Outputs are bit-identical to
-per-request greedy decoding (tests/test_serving.py proves it).
+lengths and generation budgets flows through a fixed set of decode slots
+(one shared ``SlotStream`` state machine, serve/slot_stream.py); finished
+slots are refilled mid-stream, and admission consumes each prompt's prefix
+in bucketed power-of-two prefill chunks — a long prompt costs a handful of
+chunk calls instead of one decode step per token.  Outputs are
+bit-identical to per-request greedy decoding (tests/test_slot_stream.py
+proves it for every family and ensemble width).
 
-Then the cascade-aware flavor: every tier runs its own slot stream, tiers
+Then the cascade-aware flavor: every tier runs its own SlotStream, tiers
 are stepped round-robin, and a slot freed by tier-1 agreement admits work
 while tier-0 is still decoding — requests whose members disagree are
-re-queued on the next tier with their prompt intact.
+re-queued on the next tier with their prompt intact.  Constant-state
+families (SSM/RWKV/hybrid) serve too: admission zeroes the slot's state
+leaves.
 
     PYTHONPATH=src python examples/continuous_batching.py
 """
@@ -39,14 +45,20 @@ def make_requests(n):
 
 
 requests = make_requests(24)
+# one long prompt to show chunked admission off the decode path
+requests.append(Request(tokens=rng.integers(0, vocab, 100).astype(np.int32),
+                        max_new_tokens=4))
 
-eng = ServingEngine(cfg, member, max_seq=64)
+eng = ServingEngine(cfg, member, max_seq=128)
 t0 = time.perf_counter()
 done = eng.serve_continuous(list(requests), n_slots=8)
 dt = time.perf_counter() - t0
 total_new = sum(len(r.output) for r in done)
+st = eng.last_stream_stats
 print(f"served {len(done)} requests / {total_new} generated tokens in {dt:.1f}s "
-      f"with 8 slots ({eng.stats['decode_tokens']} slot-steps)")
+      f"with 8 slots ({st['decode_tokens']} slot-steps; "
+      f"{st['chunk_tokens']} prompt tokens admitted via {st['chunk_calls']} "
+      f"prefill chunks instead of decode steps)")
 print(f"e.g. request {done[0].rid}: prompt[{len(done[0].tokens)}] -> "
       f"{done[0].output.tolist()}")
 

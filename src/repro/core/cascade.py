@@ -110,6 +110,26 @@ def bucket_chunks(n: int, floor: int = 8) -> List[int]:
     return sizes
 
 
+def prompt_chunks(n: int, max_chunk: int = 256) -> List[int]:
+    """Exact power-of-two cover of ``n`` prompt tokens (largest-first).
+
+    Chunked-prefill admission (serve/slot_stream.py) consumes a prompt
+    prefix through per-bucket jitted prefill programs; every chunk size here
+    comes from the O(log S) set {1, 2, 4, ..., max_chunk}, so after warmup
+    no admission ever traces a new program.  Unlike ``bucket_chunks`` (batch
+    re-padding, where overshoot is just padded rows), prompt chunks must
+    tile EXACTLY — a padded prompt token would write a bogus KV row /
+    advance SSM state — so the tail reuses ``bucket_chunks`` with floor 1,
+    which is the plain binary decomposition and never overshoots."""
+    sizes: List[int] = []
+    while n >= max_chunk:
+        sizes.append(max_chunk)
+        n -= max_chunk
+    if n > 0:
+        sizes.extend(bucket_chunks(n, floor=1))
+    return sizes
+
+
 def _pad_rows(x, n):
     if x.shape[0] == n:
         return x

@@ -680,6 +680,248 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
+# slot-stream support: chunked prefill into one slot + per-slot state reset
+# ---------------------------------------------------------------------------
+
+# Constant-size recurrent state leaves (everything that is NOT pos-masked).
+# Attention KV rows are protected by the per-slot pos mask, so a reused slot
+# only ever sees rows it wrote itself; these leaves have no such mask and
+# must be zeroed when a slot admits a new request.
+_SLOT_STATE_KEYS = ("conv", "ssm", "tm_x", "cm_x", "wkv")
+
+
+def has_slot_state(cfg: ModelConfig) -> bool:
+    """True for families whose slot cache carries non-pos-masked state."""
+    return cfg.family in ("ssm_mamba2", "ssm_rwkv6", "hybrid")
+
+
+def reset_slot(cache, slot, cfg: ModelConfig):
+    """Zero one slot's constant-state leaves (slot admission for SSM/RWKV
+    and hybrid families).  ``cache`` is the canonical ``init_cache`` values
+    tree (batch axis = slots, axis 1 of every stacked leaf); attention KV
+    leaves are left untouched — the pos mask already isolates them."""
+    if not has_slot_state(cfg):
+        return cache
+    out = dict(cache)
+    for name in _SLOT_STATE_KEYS:
+        if name in out and not isinstance(out[name], list):
+            out[name] = out[name].at[:, slot].set(0)
+    return out
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked-prefill admission is available for every decode-capable
+    family on the kernel-native cache layout (the legacy layout keeps
+    decode-only admission as its baseline)."""
+    from repro.models.layers import LEGACY_DECODE
+
+    return (
+        not cfg.is_encoder
+        and not LEGACY_DECODE
+        and cfg.family in ("dense", "moe", "vlm", "ssm_mamba2", "ssm_rwkv6", "hybrid")
+    )
+
+
+def prefill_into_slot(
+    params,
+    tokens,
+    cache,
+    slot,
+    start,
+    cfg: ModelConfig,
+    *,
+    window_override=None,
+):
+    """Consume a C-token chunk of one slot's prompt into the slot cache.
+
+    tokens: (C,) int32 — prompt positions [start, start+C); cache: the full
+    stacked slot cache (``init_cache`` values, batch axis = slots); slot and
+    start are traced scalars, so one jitted program serves every slot and
+    offset, tracing once per chunk length C (the O(log S) bucket warmup).
+
+    Attention families write K/V rows at the slot's offset; constant-state
+    families thread the slot's recurrent state through the full-sequence
+    block forwards (``initial=``/``state=`` continuation).  No logits are
+    produced: the LAST prompt token is never chunked — it is fed through
+    the shared decode program, whose logits sample the first output token,
+    which is what makes chunked and decode-only admission token-identical.
+
+    MoE caveat: ``apply_moe``'s capacity depends on tokens-per-call, so in
+    a capacity-LIMITED regime a C-token chunk can drop tokens that
+    per-token decode admission would keep (exactly as the batch prefill
+    path already differs from decode).  The token-for-token equivalence
+    contract therefore holds whenever no capacity drops occur — e.g.
+    ``capacity_factor >= n_experts`` guarantees it (tests/test_slot_stream
+    pins this); serve capacity-tight MoE with ``chunked_prefill=False`` if
+    bitwise admission parity matters more than admission latency.
+
+    Returns the updated cache."""
+    window = window_override if window_override is not None else cfg.sliding_window
+    fam = cfg.family
+    slot = jnp.asarray(slot)
+    start = jnp.asarray(start)
+    x = params["embed"][tokens][None, :, :]  # (1, C, D)
+    x = constrain(x, ("act_batch", None, "act_embed"))
+
+    def take(t):  # slot row of a stacked (L, n_slots, ...) leaf, keepdims
+        return jax.lax.dynamic_index_in_dim(t, slot, 1, keepdims=True)
+
+    def put(full, part):
+        return jax.lax.dynamic_update_index_in_dim(full, part, slot, 1)
+
+    if fam in ("dense", "moe", "vlm") and not _interleaved_moe(cfg):
+
+        def body(h, inp):
+            lp, kc, vc = inp
+            h, (kc, vc) = BD.dense_layer_prefill_chunk(
+                lp, h, cfg, kc, vc, start, sliding_window=window
+            )
+            return h, (kc, vc)
+
+        _, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], take(cache["k"]), take(cache["v"]))
+        )
+        return {"k": put(cache["k"], k_new), "v": put(cache["v"], v_new)}
+
+    if _interleaved_moe(cfg):
+        me = cfg.moe_every
+        n_groups = cfg.n_layers // me
+        grp_dense = jax.tree.map(
+            lambda t: t.reshape((n_groups, me - 1) + t.shape[1:]),
+            params["layers"]["dense"],
+        )
+        grp_cache = jax.tree.map(
+            lambda t: t.reshape((n_groups, me) + t.shape[1:]),
+            {"k": take(cache["k"]), "v": take(cache["v"])},
+        )
+
+        def one(h, inp):
+            lp, kc, vc = inp
+            h, (kc, vc) = BD.dense_layer_prefill_chunk(
+                lp, h, cfg, kc, vc, start, sliding_window=window
+            )
+            return h, (kc, vc)
+
+        def body(h, inp):
+            lp_d, lp_m, cg = inp
+            h, (kd, vd) = jax.lax.scan(
+                one, h, (lp_d, cg["k"][: me - 1], cg["v"][: me - 1])
+            )
+            h, (km, vm) = BD.dense_layer_prefill_chunk(
+                lp_m, h, cfg, cg["k"][me - 1], cg["v"][me - 1], start,
+                sliding_window=window,
+            )
+            k_new = jnp.concatenate([kd, km[None]], axis=0)
+            v_new = jnp.concatenate([vd, vm[None]], axis=0)
+            return h, (k_new, v_new)
+
+        _, (k_new, v_new) = jax.lax.scan(
+            body, x, (grp_dense, params["layers"]["moe"], grp_cache)
+        )
+        return {
+            "k": put(cache["k"], k_new.reshape((cfg.n_layers,) + k_new.shape[2:])),
+            "v": put(cache["v"], v_new.reshape((cfg.n_layers,) + v_new.shape[2:])),
+        }
+
+    if fam == "ssm_mamba2":
+
+        def body(h, inp):
+            lp, st = inp
+            out, st = BM.mamba2_fwd(lp, h, cfg, initial=st, return_state=True)
+            return h + out, st
+
+        _, states = jax.lax.scan(
+            body, x, (params["layers"],
+                      {"conv": take(cache["conv"]), "ssm": take(cache["ssm"])})
+        )
+        return {"conv": put(cache["conv"], states["conv"]),
+                "ssm": put(cache["ssm"], states["ssm"])}
+
+    if fam == "ssm_rwkv6":
+
+        def body(h, inp):
+            lp, st = inp
+            h, st = BR.rwkv6_layer_fwd(lp, h, cfg, state=st, return_state=True)
+            return h, st
+
+        _, states = jax.lax.scan(
+            body,
+            x,
+            (
+                params["layers"],
+                {"tm_x": take(cache["tm_x"]), "cm_x": take(cache["cm_x"]),
+                 "wkv": take(cache["wkv"])},
+            ),
+        )
+        return {k: put(cache[k], states[k]) for k in ("tm_x", "cm_x", "wkv")}
+
+    if fam == "hybrid":
+        # mirror the grouped decode path (§Perf iteration 3): scan the mamba
+        # chunk-forward within each shared-attention group, then one chunk
+        # attention over the group's per-invocation slot rows
+        shared = params["shared_attn"]
+        every = cfg.attn_every
+        n_inv = cfg.n_layers // every
+        n_grouped = n_inv * every
+        grp_params = jax.tree.map(
+            lambda t: t[:n_grouped].reshape((n_inv, every) + t.shape[1:]),
+            params["layers"],
+        )
+        grp_state = jax.tree.map(
+            lambda t: t[:n_grouped].reshape((n_inv, every) + t.shape[1:]),
+            {"conv": take(cache["conv"]), "ssm": take(cache["ssm"])},
+        )
+
+        def mamba_body(h, inp):
+            lp, st = inp
+            out, st = BM.mamba2_fwd(lp, h, cfg, initial=st, return_state=True)
+            return h + out, st
+
+        def take0(t):  # per-invocation (n_slots, KVH, S, hd) leaves
+            return jax.lax.dynamic_index_in_dim(t, slot, 0, keepdims=True)
+
+        new_states = []
+        new_ak, new_av = [], []
+        for g in range(n_inv):
+            lp_g = jax.tree.map(lambda t: t[g], grp_params)
+            st_g = jax.tree.map(lambda t: t[g], grp_state)
+            x, st_out = jax.lax.scan(mamba_body, x, (lp_g, st_g))
+            x, (kc, vc) = BD.dense_layer_prefill_chunk(
+                shared, x, cfg,
+                take0(cache["attn_k"][g]), take0(cache["attn_v"][g]), start,
+                sliding_window=window,
+            )
+            new_states.append(st_out)
+            new_ak.append(kc)
+            new_av.append(vc)
+
+        if n_grouped < cfg.n_layers:  # trailing mamba layers (no attn after)
+            lp_t = jax.tree.map(lambda t: t[n_grouped:], params["layers"])
+            st_t = {"conv": take(cache["conv"])[n_grouped:],
+                    "ssm": take(cache["ssm"])[n_grouped:]}
+            x, st_out = jax.lax.scan(mamba_body, x, (lp_t, st_t))
+            new_states.append(st_out)
+
+        merged = jax.tree.map(
+            lambda *xs: jnp.concatenate([t for t in xs], axis=0), *new_states
+        )
+        return {
+            "conv": put(cache["conv"], merged["conv"]),
+            "ssm": put(cache["ssm"], merged["ssm"]),
+            "attn_k": [
+                jax.lax.dynamic_update_index_in_dim(cache["attn_k"][g], new_ak[g], slot, 0)
+                for g in range(n_inv)
+            ],
+            "attn_v": [
+                jax.lax.dynamic_update_index_in_dim(cache["attn_v"][g], new_av[g], slot, 0)
+                for g in range(n_inv)
+            ],
+        }
+
+    raise ValueError(f"chunked prefill unsupported for family {fam}")
+
+
+# ---------------------------------------------------------------------------
 # inputs: ShapeDtypeStruct specs (dry-run) and concrete arrays (smoke)
 # ---------------------------------------------------------------------------
 

@@ -54,6 +54,36 @@ def dense_layer_fwd(
     return x, aux, kv
 
 
+def dense_layer_prefill_chunk(
+    p,
+    x,
+    cfg: ModelConfig,
+    k_cache,
+    v_cache,
+    start,
+    *,
+    sliding_window: Optional[int] = None,
+):
+    """Chunked-prefill for one slot row.  x: (1, C, D); caches are the
+    slot's (1, KVH, S_max, hd) rows; ``start`` the chunk's first absolute
+    position.  Returns (x, (k_cache, v_cache))."""
+    h, caches = L.attention_prefill_chunk(
+        p["attn"],
+        L.apply_norm(p["ln1"], x, cfg),
+        cfg,
+        k_cache,
+        v_cache,
+        start,
+        sliding_window=sliding_window,
+    )
+    x = x + h
+    if "moe" in p:
+        h, _ = L.apply_moe(p["moe"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    else:
+        h = L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    return x + h, caches
+
+
 def dense_layer_decode(
     p,
     x,

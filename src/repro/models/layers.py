@@ -242,6 +242,58 @@ def attention_decode(
     return attn_output(p, ctx, cfg), (k_cache, v_cache)
 
 
+def attention_prefill_chunk(
+    p,
+    x,
+    cfg: ModelConfig,
+    k_cache,
+    v_cache,
+    start,
+    *,
+    use_rope: bool = True,
+    sliding_window: Optional[int] = None,
+):
+    """Chunked-prefill attention for one slot row (continuous batching).
+
+    x: (1, C, D) — a C-token chunk of one request's prompt; caches are the
+    slot's kernel-native (1, KVH, S_max, hd) rows; ``start`` is the (traced)
+    absolute position of the chunk's first token.  Writes the chunk's K/V at
+    rows [start, start+C) and attends each chunk token causally over the
+    cache prefix — row t is visible to chunk token j iff t <= start+j, the
+    same per-slot pos-masking contract as ``attention_decode`` (stale rows
+    from a slot's previous occupant stay invisible).  Returns
+    (out (1, C, D), (k_cache, v_cache))."""
+    B, C, _ = x.shape
+    S = k_cache.shape[2]
+    start = jnp.asarray(start)
+    positions = start + jnp.arange(C)[None, :]  # (1, C) absolute positions
+    q, k, v = qkv_project(p, x, cfg, positions, use_rope=use_rope)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.transpose(0, 2, 1, 3).astype(k_cache.dtype), (0, 0, start, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.transpose(0, 2, 1, 3).astype(v_cache.dtype), (0, 0, start, 0)
+    )
+    KVH = k_cache.shape[1]
+    H, hd = q.shape[2], q.shape[3]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, C, KVH, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bckgd,bksd->bkgcs", qg, k_cache.astype(jnp.float32))
+    if cfg.attn_logit_softcap is not None:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    cols = jnp.arange(S)[None, :]  # (1, S)
+    rows = positions[0][:, None]  # (C, 1)
+    mask = cols <= rows
+    if sliding_window is not None:
+        mask &= cols > rows - sliding_window
+    s = jnp.where(mask[None, None, None, :, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bkgcs,bksd->bckgd", pr, v_cache.astype(jnp.float32))
+    ctx = ctx.reshape(B, C, H, hd).astype(q.dtype)
+    return attn_output(p, ctx, cfg), (k_cache, v_cache)
+
+
 # ---------------------------------------------------------------------------
 # MoE (token-choice top-k, capacity-dropped, scatter dispatch)
 # ---------------------------------------------------------------------------

@@ -1,11 +1,15 @@
 from repro.serve.batching import Request, RequestQueue
 from repro.serve.engine import ServingEngine
+from repro.serve.slot_stream import EngineBackend, SlotStream, TierBackend
 from repro.serve.cascade_server import CascadeServer, CascadeTier
 
 __all__ = [
     "Request",
     "RequestQueue",
     "ServingEngine",
+    "SlotStream",
+    "EngineBackend",
+    "TierBackend",
     "CascadeServer",
     "CascadeTier",
 ]

@@ -22,6 +22,10 @@ class Request:
     # filled by the engine:
     output: Optional[np.ndarray] = None
     tier: int = -1
+    # True when the slot hit the cache wall (pos >= max_seq - 1) before the
+    # full max_new_tokens budget was generated: ``output`` is short, not
+    # silently complete.
+    truncated: bool = False
 
 
 _pow2_at_least = bucket_size  # canonical bucket helper lives in core.cascade

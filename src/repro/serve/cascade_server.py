@@ -13,10 +13,15 @@ Tiers hold ensembles (stacked weights, vmapped members).  Three modes:
   stable digests of the generated sequences (Eq. 3 with vote_rule_from_preds).
 
 * ``serve_continuous`` — cascade-aware continuous batching: each tier runs
-  a slot-based ensemble decode stream; a slot that finishes votes on its
-  member generations, and freed slots admit work from the tier's queue —
-  which is fed live by the *previous* tier's deferrals (tier streams are
-  stepped round-robin, so tier i+1 starts while tier i is still decoding).
+  a ``SlotStream`` (serve/slot_stream.py — the SAME slot state machine the
+  single-model engine drives at E=1, here at E=k over stacked-ensemble
+  programs, with chunked-prefill admission and constant-state slot reset);
+  a slot that finishes votes on its member generations, and freed slots
+  admit work from the tier's queue — which is fed live by the *previous*
+  tier's deferrals (tier streams are stepped round-robin, so tier i+1
+  starts while tier i is still decoding).  All families serve: attention
+  tiers rely on the per-slot pos mask, SSM/RWKV/hybrid tiers on the
+  admitted slot's state leaves being zeroed.
 
 Compile-once discipline: all jitted programs live in a module-level cache
 keyed by (config, temperature) — building a new ``CascadeTier`` or calling
@@ -32,9 +37,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import zlib
-from collections import deque
 from types import SimpleNamespace
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +50,7 @@ from repro.core.cascade import CascadeResult, TierSpec, cascade_apply_routed
 from repro.models import api
 from repro.serve.batching import Request
 from repro.serve.engine import _counted, grow_cache
+from repro.serve.slot_stream import SlotStream, TierBackend
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +118,14 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
         nxt, rng = _sample(logits, rng)
         return nxt[..., None], caches, rng
 
+    def prefill_chunk(values, caches, tokens, slot, start):
+        return jax.vmap(
+            lambda p, c: api.prefill_into_slot(p, tokens, c, slot, start, cfg)
+        )(values, caches)
+
+    def reset_slot(caches, slot):
+        return jax.vmap(lambda c: api.reset_slot(c, slot, cfg))(caches)
+
     key = f"{cfg.name}@T{temperature:g}"
     return SimpleNamespace(
         last_logits=jax.jit(
@@ -123,6 +136,16 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
         ),
         prefill=jax.jit(_counted(f"{key}/ens_prefill", prefill)),
         decode=jax.jit(_counted(f"{key}/ens_decode", decode)),
+        prefill_chunk=(
+            jax.jit(_counted(f"{key}/ens_prefill_chunk", prefill_chunk))
+            if api.supports_chunked_prefill(cfg)
+            else None
+        ),
+        reset_slot=(
+            jax.jit(_counted(f"{key}/ens_slot_reset", reset_slot))
+            if api.has_slot_state(cfg)
+            else None
+        ),
     )
 
 
@@ -139,6 +162,8 @@ class CascadeTier:
         self._last_logits = programs.last_logits
         self._prefill = programs.prefill
         self._decode = programs.decode
+        self._prefill_chunk = programs.prefill_chunk
+        self._reset_slot = programs.reset_slot
 
     def generate(
         self, tokens: np.ndarray, max_new_tokens: int, seed: int = 0
@@ -160,94 +185,6 @@ class CascadeTier:
             )
             out.append(np.asarray(tok)[..., 0])
         return np.stack(out, axis=2)  # (E, B, T)
-
-
-# ---------------------------------------------------------------------------
-# per-tier continuous decode stream (cascade-aware continuous batching)
-# ---------------------------------------------------------------------------
-
-
-class _TierStream:
-    """Slot-based ensemble decode for one tier.  Admission is decode-only
-    (prompts are fed token-by-token through the same program, so shapes are
-    uniform); a freed slot immediately admits from ``self.queue`` — which
-    the previous tier's voting feeds live with its deferrals."""
-
-    def __init__(self, tier: CascadeTier, index: int, *, n_slots: int,
-                 max_seq: int, seed: int):
-        assert tier.cfg.family in ("dense", "moe", "vlm"), (
-            "cascade continuous batching needs pos-masked slot reuse; "
-            "constant-state families would leak state across admissions"
-        )
-        self.tier = tier
-        self.index = index
-        self.n_slots = n_slots
-        self.max_seq = max_seq
-        self.queue: deque = deque()
-        self.rng = jax.random.PRNGKey(seed)
-        E = tier.k
-        cache0 = api.init_cache(tier.cfg, n_slots, max_seq)
-        values0 = jax.tree.map(lambda b: b.value, cache0,
-                               is_leaf=lambda x: hasattr(x, "axes"))
-        self.caches = jax.tree.map(
-            lambda v: jnp.zeros((E,) + v.shape, v.dtype), values0
-        )
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.slot_consumed = np.zeros(n_slots, np.int64)
-        self.slot_emitted: List[List[np.ndarray]] = [[] for _ in range(n_slots)]
-        self.pos = np.zeros(n_slots, np.int32)
-        self.tok = np.zeros((E, n_slots, 1), np.int32)
-        self.steps = 0
-
-    def _admit(self, s: int):
-        if not self.queue:
-            self.slot_req[s] = None
-            return
-        r = self.queue.popleft()
-        self.slot_req[s] = r
-        self.slot_consumed[s] = 1
-        self.slot_emitted[s] = []
-        self.pos[s] = 0
-        self.tok[:, s, 0] = r.tokens[0]
-
-    def refill(self):
-        for s in range(self.n_slots):
-            if self.slot_req[s] is None and self.queue:
-                self._admit(s)
-
-    @property
-    def active(self) -> bool:
-        return any(r is not None for r in self.slot_req) or bool(self.queue)
-
-    def step(self) -> List[tuple]:
-        """One vmapped decode step for every slot; returns the list of
-        (request, member_generations (E, T)) that completed this step."""
-        self.refill()
-        if not any(r is not None for r in self.slot_req):
-            return []
-        tok, self.caches, self.rng = self.tier._decode(
-            self.tier.values, jnp.asarray(self.tok), self.caches,
-            jnp.asarray(self.pos), self.rng,
-        )
-        nxt = np.asarray(tok)[..., 0]  # (E, n_slots)
-        self.steps += 1
-        completed = []
-        for s, r in enumerate(self.slot_req):
-            if r is None:
-                continue
-            self.pos[s] += 1
-            if self.slot_consumed[s] < len(r.tokens):
-                self.tok[:, s, 0] = r.tokens[self.slot_consumed[s]]
-                self.slot_consumed[s] += 1
-            else:
-                self.slot_emitted[s].append(nxt[:, s].copy())
-                self.tok[:, s, 0] = nxt[:, s]
-                if (len(self.slot_emitted[s]) >= r.max_new_tokens
-                        or self.pos[s] >= self.max_seq - 1):
-                    gen = np.stack(self.slot_emitted[s], axis=1)  # (E, T)
-                    completed.append((r, gen))
-                    self._admit(s)
-        return completed
 
 
 class CascadeServer:
@@ -299,41 +236,51 @@ class CascadeServer:
         n_slots: int = 8,
         max_seq: int = 256,
         seed: int = 0,
+        chunked_prefill: bool = True,
     ) -> List[Request]:
-        """Continuous-batching generate mode: every tier runs a slot-based
-        ensemble decode stream; streams are stepped round-robin, so a
-        request deferred by tier i is admitted into a freed tier-i+1 slot
-        while tier i is still decoding its remaining slots.  A completed
-        slot votes over its member generations (Eq. 3 on stable digests):
-        agreement -> the request exits with the majority answer and
-        ``r.tier`` set; disagreement -> the request is re-queued (prompt
-        intact) on the next tier.  Returns completed requests."""
+        """Continuous-batching generate mode: every tier runs a
+        ``SlotStream`` (serve/slot_stream.py, the E=k instantiation of the
+        shared slot state machine) over its stacked-ensemble programs;
+        streams are stepped round-robin, so a request deferred by tier i is
+        admitted into a freed tier-i+1 slot while tier i is still decoding
+        its remaining slots.  Admission uses bucketed chunked prefill by
+        default; constant-state tiers (SSM/RWKV, hybrid) zero the admitted
+        slot's state leaves, so every family serves continuously.  A
+        completed slot votes over its member generations (Eq. 3 on stable
+        digests): agreement -> the request exits with the majority answer
+        and ``r.tier`` set; disagreement -> the request is re-queued
+        (prompt intact) on the next tier.  Returns completed requests."""
         for r in requests:
             assert len(r.tokens) + r.max_new_tokens <= max_seq, (
                 f"request {r.rid}: prompt+budget "
                 f"{len(r.tokens)}+{r.max_new_tokens} exceeds max_seq={max_seq}"
             )
         streams = [
-            _TierStream(t, i, n_slots=n_slots, max_seq=max_seq, seed=seed + i)
+            SlotStream(
+                TierBackend(t, n_slots=n_slots, max_seq=max_seq, seed=seed + i),
+                n_slots=n_slots, max_seq=max_seq,
+                chunked_prefill=chunked_prefill,
+            )
             for i, t in enumerate(self.tiers)
         ]
-        streams[0].queue.extend(requests)
+        streams[0].submit(requests)
         done: List[Request] = []
         n_tiers = len(streams)
 
         while any(st.active for st in streams):
             for i, st in enumerate(streams):
+                tier = st.backend.tier
                 for r, gen in st.step():
                     digests = np.asarray(
-                        [stable_digest(gen[e]) for e in range(st.tier.k)],
+                        [stable_digest(gen[e]) for e in range(tier.k)],
                         np.int32,
                     )
                     out = deferral.vote_rule_from_preds(
-                        jnp.asarray(digests[:, None]), st.tier.spec.theta
+                        jnp.asarray(digests[:, None]), tier.spec.theta
                     )
                     defer = bool(np.asarray(out.defer)[0]) and i < n_tiers - 1
                     if defer:
-                        streams[i + 1].queue.append(r)
+                        streams[i + 1].submit([r])
                     else:
                         winner = int(
                             np.argmax(digests == int(np.asarray(out.pred)[0]))
@@ -341,6 +288,7 @@ class CascadeServer:
                         r.output = np.asarray(gen[winner], np.int32)
                         r.tier = i
                         done.append(r)
+        self.last_stream_stats = [dict(st.stats) for st in streams]
         return done
 
     # -- accounting ---------------------------------------------------------

@@ -12,6 +12,11 @@ traffic reuses the existing programs and their jit caches.  Each program
 body bumps a trace counter as a Python side effect, which only runs when
 jax actually (re)traces — ``trace_count()`` therefore measures compilations,
 and the serving tests assert it stays flat across repeated same-shape calls.
+
+Continuous batching lives in ``serve/slot_stream.py`` (the shared slot
+state machine; see its docstring for the per-slot pos-masking / state-reset
+contract).  ``ServingEngine.serve_continuous`` is the E=1 driver over it,
+with chunked-prefill admission on by default.
 """
 from __future__ import annotations
 
@@ -61,14 +66,45 @@ def _counted(key: str, fn):
 
 @functools.lru_cache(maxsize=None)
 def model_programs(cfg: ModelConfig) -> SimpleNamespace:
-    """Long-lived jitted prefill/decode programs for one model config."""
+    """Long-lived jitted programs for one model config.
+
+    ``prefill``/``decode`` are the batch programs; ``prefill_chunk`` is the
+    slot-stream chunked-prefill-into-slot program (traces once per pow2
+    chunk length — the O(log S) bucket warmup) and ``reset_slot`` the
+    constant-state slot zeroing program (families without recurrent slot
+    state get ``None``: the per-slot pos mask already isolates them)."""
     prefill = jax.jit(
         _counted(f"{cfg.name}/prefill", functools.partial(api.prefill, cfg=cfg))
     )
     decode = jax.jit(
         _counted(f"{cfg.name}/decode", functools.partial(api.decode_step, cfg=cfg))
     )
-    return SimpleNamespace(prefill=prefill, decode=decode)
+    prefill_chunk = (
+        jax.jit(
+            _counted(
+                f"{cfg.name}/prefill_chunk",
+                functools.partial(api.prefill_into_slot, cfg=cfg),
+            )
+        )
+        if api.supports_chunked_prefill(cfg)
+        else None
+    )
+    reset_slot = (
+        jax.jit(
+            _counted(
+                f"{cfg.name}/slot_reset",
+                functools.partial(api.reset_slot, cfg=cfg),
+            )
+        )
+        if api.has_slot_state(cfg)
+        else None
+    )
+    return SimpleNamespace(
+        prefill=prefill,
+        decode=decode,
+        prefill_chunk=prefill_chunk,
+        reset_slot=reset_slot,
+    )
 
 
 def grow_cache(cache, pad: int, cfg: ModelConfig, *, lead: int = 0):
@@ -157,69 +193,59 @@ class ServingEngine:
         return np.stack(out, axis=1)
 
     # -- continuous batching ----------------------------------------------
-    def serve_continuous(
-        self, requests: List[Request], *, n_slots: int = 8, max_seq: Optional[int] = None
-    ) -> List[Request]:
-        """Slot-based continuous batching: one decode step advances every
-        active slot by one token at its OWN position (per-slot ``pos``
-        vector; see decode_attention per-sequence lengths).  New requests
-        are admitted into freed slots mid-stream; their prompts are
-        consumed through the same decode program (decode-only admission —
-        uniform shapes, one compiled program; chunked prefill admission is
-        the production extension).  Repeated invocations reuse the
-        module-level jitted decode — nothing is re-jitted per call.
-        Returns the completed requests."""
-        cfg = self.cfg
-        assert not cfg.is_encoder
+    def slot_stream(
+        self,
+        *,
+        n_slots: int = 8,
+        max_seq: Optional[int] = None,
+        chunked_prefill: bool = True,
+        max_chunk: int = 256,
+    ):
+        """A fresh ``SlotStream`` (serve/slot_stream.py) over this engine's
+        compile-once programs — the E=1 instantiation of the shared slot
+        state machine."""
+        from repro.serve.slot_stream import EngineBackend, SlotStream
+
         if max_seq is None:
             max_seq = self.max_seq
-        cache_boxed = api.init_cache(cfg, n_slots, max_seq)
-        cache = jax.tree.map(lambda b: b.value, cache_boxed,
-                             is_leaf=lambda x: hasattr(x, "axes"))
+        backend = EngineBackend(
+            self.cfg, self.params, model_programs(self.cfg), self._sample,
+            n_slots=n_slots, max_seq=max_seq, stats=self.stats,
+        )
+        return SlotStream(
+            backend, n_slots=n_slots, max_seq=max_seq,
+            chunked_prefill=chunked_prefill, max_chunk=max_chunk,
+        )
 
-        queue = list(requests)
+    def serve_continuous(
+        self,
+        requests: List[Request],
+        *,
+        n_slots: int = 8,
+        max_seq: Optional[int] = None,
+        chunked_prefill: bool = True,
+    ) -> List[Request]:
+        """Slot-based continuous batching: a thin driver over ``SlotStream``
+        (the E=1 case of the shared slot state machine).  One decode step
+        advances every active slot by one token at its OWN position
+        (per-slot ``pos`` vector; see decode_attention per-sequence
+        lengths); freed slots admit new requests mid-stream, consuming
+        ``prompt[:-1]`` through bucketed chunked prefill (or token-by-token
+        through the decode program with ``chunked_prefill=False``).
+        Repeated invocations reuse the module-level jitted programs —
+        nothing is re-jitted per call.  Requests cut short by the cache
+        wall (``pos >= max_seq - 1``) come back with ``truncated=True``.
+        Returns the completed requests."""
+        stream = self.slot_stream(
+            n_slots=n_slots, max_seq=max_seq, chunked_prefill=chunked_prefill
+        )
+        stream.submit(requests)
         done: List[Request] = []
-        slot_req: List[Optional[Request]] = [None] * n_slots
-        slot_consumed = np.zeros(n_slots, np.int64)  # prompt tokens fed
-        slot_emitted = [list() for _ in range(n_slots)]
-        pos = np.zeros(n_slots, np.int32)
-        tok = np.zeros((n_slots, 1), np.int32)
-
-        def admit(s):
-            if not queue:
-                slot_req[s] = None
-                return
-            r = queue.pop(0)
-            slot_req[s] = r
-            slot_consumed[s] = 1
-            slot_emitted[s] = []
-            pos[s] = 0
-            tok[s, 0] = r.tokens[0]
-
-        for s in range(n_slots):
-            admit(s)
-
-        while any(r is not None for r in slot_req):
-            logits, cache = self._decode(
-                self.params, jnp.asarray(tok), cache, jnp.asarray(pos)
-            )
-            nxt = np.asarray(self._sample(logits))
-            self.stats["decode_tokens"] += int(sum(r is not None for r in slot_req))
-            for s, r in enumerate(slot_req):
-                if r is None:
-                    continue
-                pos[s] += 1
-                if slot_consumed[s] < len(r.tokens):
-                    # still feeding the prompt
-                    tok[s, 0] = r.tokens[slot_consumed[s]]
-                    slot_consumed[s] += 1
-                else:
-                    slot_emitted[s].append(int(nxt[s]))
-                    tok[s, 0] = nxt[s]
-                    if len(slot_emitted[s]) >= r.max_new_tokens or pos[s] >= max_seq - 1:
-                        r.output = np.asarray(slot_emitted[s], np.int32)
-                        done.append(r)
-                        admit(s)
+        for r, gen in stream.drain():
+            r.output = np.asarray(gen[0], np.int32)
+            done.append(r)
+        self.stats["decode_tokens"] += stream.stats["decode_tokens"]
+        self.last_stream_stats = dict(stream.stats)
         return done
 
     # -- queue-driven serving --------------------------------------------

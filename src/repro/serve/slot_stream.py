@@ -1,0 +1,271 @@
+"""SlotStream: the single slot state machine behind all continuous batching.
+
+One ``SlotStream`` owns the admit / refill / prompt-feed / force-complete
+lifecycle of ``n_slots`` decode slots over stacked ``(E, n_slots, ...)``
+caches; the single-model engine is just the E=1 case and a cascade tier the
+E=k case, so ``ServingEngine.serve_continuous`` and
+``CascadeServer.serve_continuous`` are both thin drivers over this module.
+
+Slot-isolation contract (why mid-stream reuse is safe):
+
+* prompts are left-aligned at position 0 of their slot; every slot advances
+  at its OWN ``pos`` (the decode program takes a per-slot (B,) position
+  vector).  Attention reads cache rows ``< pos+1`` only, so stale KV rows
+  written by a slot's previous occupant are invisible — that is the
+  pos-masking contract shared with ``attention_decode`` and
+  ``attention_prefill_chunk``.
+* constant-state families (SSM/RWKV, hybrid's mamba leaves) have no pos
+  mask, so admission zeroes the slot's state leaves through the backend's
+  jitted ``reset_slot`` program — this is what lifts the old
+  attention-families-only restriction on cascade continuous batching.
+
+Chunked-prefill admission: on admit, ``prompt[:-1]`` is consumed in exact
+power-of-two chunks (``core.cascade.prompt_chunks``) through a per-bucket
+jitted prefill-into-slot program (``models.api.prefill_into_slot``) that
+writes KV rows / advances state at the slot's offset — a 400-token prompt
+costs a handful of chunk calls instead of ~400 decode steps.  The final
+prompt token always goes through the shared decode program (its logits
+sample the first output token), which keeps chunked and decode-only
+admission token-for-token identical.  Chunk shapes come from the O(log S)
+bucket set, so trace counters stay flat across requests after warmup.
+
+Device work goes through a small backend protocol (duck-typed):
+
+    E                        int, ensemble width
+    supports_chunked_prefill bool
+    decode(tok (E, n_slots, 1), pos (n_slots,)) -> next (E, n_slots)
+    prefill_chunk(tokens (C,), slot, start)     -> None   (updates cache)
+    reset_slot(slot)                            -> None   (zero state leaves)
+
+``EngineBackend`` (E=1, host-side sampling via the engine's rng) and
+``TierBackend`` (ensemble programs with in-program sampling) are provided
+here; both reuse the module-level compile-once program caches.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import prompt_chunks
+from repro.models import api
+from repro.models.params import unbox
+from repro.serve.batching import Request
+
+
+class SlotStream:
+    """Slot-based continuous batching over a device backend."""
+
+    def __init__(
+        self,
+        backend,
+        *,
+        n_slots: int = 8,
+        max_seq: int = 256,
+        chunked_prefill: bool = True,
+        max_chunk: int = 256,
+    ):
+        self.backend = backend
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.max_chunk = max_chunk
+        self.chunked = bool(chunked_prefill) and backend.supports_chunked_prefill
+        E = backend.E
+        self.queue: deque = deque()
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_consumed = np.zeros(n_slots, np.int64)  # prompt tokens fed
+        self.slot_emitted: List[List[np.ndarray]] = [[] for _ in range(n_slots)]
+        self.pos = np.zeros(n_slots, np.int32)
+        self.tok = np.zeros((E, n_slots, 1), np.int32)
+        self.steps = 0
+        self.stats = {
+            "admitted": 0,
+            "chunk_calls": 0,
+            "chunk_tokens": 0,
+            "decode_tokens": 0,  # active slot-steps through the decode program
+            # host wall time inside admission / decode dispatch.  jax
+            # dispatch is async, so these measure enqueue overhead, not
+            # device compute — block_until_ready on the backend's cache
+            # around refill()/step() to measure true device latency
+            # (benchmarks/bench_serving.py does).
+            "admit_time": 0.0,
+            "decode_time": 0.0,
+        }
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, requests: Sequence[Request]):
+        for r in requests:
+            assert len(r.tokens) >= 1, f"request {r.rid}: empty prompt"
+            assert len(r.tokens) < self.max_seq, (
+                f"request {r.rid}: prompt length {len(r.tokens)} does not fit "
+                f"max_seq={self.max_seq}"
+            )
+            self.queue.append(r)
+
+    def _admit(self, s: int):
+        if not self.queue:
+            self.slot_req[s] = None
+            return
+        r = self.queue.popleft()
+        t0 = time.perf_counter()
+        self.backend.reset_slot(s)
+        consumed = 0
+        if self.chunked and len(r.tokens) > 1:
+            # consume prompt[:-1] in bucketed pow2 chunks; the last prompt
+            # token rides the decode program (see module docstring)
+            m = len(r.tokens) - 1
+            chunks = prompt_chunks(m, self.max_chunk)
+            off = 0
+            for c in chunks:
+                self.backend.prefill_chunk(r.tokens[off : off + c], s, off)
+                off += c
+            consumed = off
+            self.stats["chunk_calls"] += len(chunks)
+            self.stats["chunk_tokens"] += m
+        self.slot_req[s] = r
+        self.slot_consumed[s] = consumed + 1
+        self.slot_emitted[s] = []
+        self.pos[s] = consumed
+        self.tok[:, s, 0] = r.tokens[consumed]
+        self.stats["admitted"] += 1
+        self.stats["admit_time"] += time.perf_counter() - t0
+
+    def refill(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                self._admit(s)
+
+    @property
+    def active(self) -> bool:
+        return any(r is not None for r in self.slot_req) or bool(self.queue)
+
+    # -- stepping ----------------------------------------------------------
+    def step(self) -> List[Tuple[Request, np.ndarray]]:
+        """Advance every active slot by one token; returns the list of
+        (request, member generations (E, T)) that completed this step.
+        Freed slots immediately admit from ``self.queue``."""
+        self.refill()
+        n_active = sum(r is not None for r in self.slot_req)
+        if n_active == 0:
+            return []
+        t0 = time.perf_counter()
+        nxt = self.backend.decode(self.tok, self.pos)  # (E, n_slots)
+        self.stats["decode_time"] += time.perf_counter() - t0
+        self.stats["decode_tokens"] += n_active
+        self.steps += 1
+        completed = []
+        for s, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            self.pos[s] += 1
+            if self.slot_consumed[s] < len(r.tokens):
+                # prompt-feed: still consuming the prompt through decode
+                self.tok[:, s, 0] = r.tokens[self.slot_consumed[s]]
+                self.slot_consumed[s] += 1
+            else:
+                self.slot_emitted[s].append(nxt[:, s].copy())
+                self.tok[:, s, 0] = nxt[:, s]
+                full = len(self.slot_emitted[s]) >= r.max_new_tokens
+                wall = self.pos[s] >= self.max_seq - 1  # out of cache rows
+                if full or wall:
+                    r.truncated = not full
+                    gen = (
+                        np.stack(self.slot_emitted[s], axis=1)
+                        if self.slot_emitted[s]
+                        else np.zeros((self.backend.E, 0), np.int32)
+                    )
+                    completed.append((r, gen))
+                    self._admit(s)
+        return completed
+
+    def drain(self) -> List[Tuple[Request, np.ndarray]]:
+        """Step until every queued request has completed."""
+        done = []
+        while self.active:
+            done.extend(self.step())
+        return done
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+class EngineBackend:
+    """E=1 backend over a single model's compile-once programs.
+
+    ``programs`` is the ``model_programs(cfg)`` namespace (decode /
+    prefill_chunk / reset_slot); sampling stays on the host through
+    ``sample`` (the engine's temperature + rng policy)."""
+
+    def __init__(self, cfg, params, programs, sample, *, n_slots, max_seq,
+                 stats=None):
+        assert not cfg.is_encoder
+        self.cfg = cfg
+        self.params = params
+        self._decode = programs.decode
+        self._chunk = getattr(programs, "prefill_chunk", None)
+        self._reset = getattr(programs, "reset_slot", None)
+        self._sample = sample
+        self._stats = stats
+        self.E = 1
+        self.cache, _ = unbox(api.init_cache(cfg, n_slots, max_seq))
+        self.supports_chunked_prefill = self._chunk is not None
+
+    def decode(self, tok, pos):
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tok[0]), self.cache, jnp.asarray(pos)
+        )
+        return np.asarray(self._sample(logits))[None]  # (1, n_slots)
+
+    def prefill_chunk(self, tokens, slot, start):
+        self.cache = self._chunk(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.int32(slot), jnp.int32(start),
+        )
+        if self._stats is not None:
+            self._stats["prefill_tokens"] += len(tokens)
+
+    def reset_slot(self, slot):
+        if self._reset is not None:
+            self.cache = self._reset(self.cache, jnp.int32(slot))
+
+
+class TierBackend:
+    """E=k backend over a cascade tier's stacked-ensemble programs (one
+    vmapped XLA program advances every member; sampling lives inside the
+    programs with the tier's rng threading)."""
+
+    def __init__(self, tier, *, n_slots, max_seq, seed: int = 0):
+        assert not tier.cfg.is_encoder
+        self.tier = tier
+        self.E = tier.k
+        self.rng = jax.random.PRNGKey(seed)
+        values0, _ = unbox(api.init_cache(tier.cfg, n_slots, max_seq))
+        self.caches = jax.tree.map(
+            lambda v: jnp.zeros((self.E,) + v.shape, v.dtype), values0
+        )
+        self.supports_chunked_prefill = (
+            getattr(tier, "_prefill_chunk", None) is not None
+        )
+
+    def decode(self, tok, pos):
+        t, self.caches, self.rng = self.tier._decode(
+            self.tier.values, jnp.asarray(tok), self.caches,
+            jnp.asarray(pos), self.rng,
+        )
+        return np.asarray(t)[..., 0]  # (E, n_slots)
+
+    def prefill_chunk(self, tokens, slot, start):
+        self.caches = self.tier._prefill_chunk(
+            self.tier.values, self.caches, jnp.asarray(tokens),
+            jnp.int32(slot), jnp.int32(start),
+        )
+
+    def reset_slot(self, slot):
+        if getattr(self.tier, "_reset_slot", None) is not None:
+            self.caches = self.tier._reset_slot(self.caches, jnp.int32(slot))

@@ -85,6 +85,60 @@ def test_serve_continuous_no_rejit():
     assert trace_count() == before, "serve_continuous must reuse its decode program"
 
 
+def test_serve_continuous_chunked_prefill_no_rejit():
+    """Chunked-prefill admission must stay compile-once: the per-bucket
+    prefill-into-slot program traces once per DISTINCT pow2 chunk length
+    (the O(log S) bucket warmup) and a second serve_continuous call with
+    the same prompt lengths re-enters the jit cache with zero new traces."""
+    from repro.core.cascade import prompt_chunks
+
+    v, _ = unbox(ens.init_ensemble(SMALL, 1, jax.random.PRNGKey(5)))
+    eng = ServingEngine(SMALL, ens.take_member(v, 0), max_seq=64)
+
+    def reqs():
+        rr = np.random.default_rng(10)
+        return [
+            Request(tokens=rr.integers(0, 64, 21).astype(np.int32),
+                    max_new_tokens=3)
+            for _ in range(5)
+        ]
+
+    chunk_key = f"{SMALL.name}/prefill_chunk"
+    before_chunk = trace_count(chunk_key)
+    eng.serve_continuous(reqs(), n_slots=4)  # warmup: bucket programs trace
+    stats = eng.last_stream_stats
+    assert stats["chunk_calls"] > 0 and stats["chunk_tokens"] == 5 * 20
+    # at most one NEW trace per distinct bucket length (21-token prompt ->
+    # chunks 16, 4; earlier tests may have warmed some buckets already)
+    assert trace_count(chunk_key) - before_chunk <= len(set(prompt_chunks(20)))
+    # and the total bucket set for this config stays O(log S)
+    assert trace_count(chunk_key) <= 5  # subset of {1, 2, 4, 8, 16}
+
+    before = trace_count()
+    done = eng.serve_continuous(reqs(), n_slots=4)
+    assert len(done) == 5
+    assert trace_count() == before, (
+        "second chunked serve_continuous must not retrace anything"
+    )
+
+
+def test_cascade_serve_continuous_no_rejit(server):
+    """Cascade continuous batching (SlotStream per tier, chunked admission)
+    re-enters the jit cache on a repeat call with zero new traces."""
+    def reqs():
+        rr = np.random.default_rng(12)
+        prompts = rr.integers(0, 64, (6, 8)).astype(np.int32)
+        return [Request(tokens=p.copy(), max_new_tokens=4) for p in prompts]
+
+    server.serve_continuous(reqs(), n_slots=3, max_seq=32)  # warmup
+    before = trace_count()
+    done = server.serve_continuous(reqs(), n_slots=3, max_seq=32)
+    assert len(done) == 6
+    assert trace_count() == before, (
+        "repeat cascade serve_continuous must not retrace"
+    )
+
+
 def test_routed_equals_dense_on_vmapped_generation(server):
     """The routed (deployment) cascade and the dense (reference) cascade
     agree on every prediction/tier when both consume the vmapped ensemble

@@ -1,0 +1,277 @@
+"""SlotStream equivalence harness.
+
+The unified slot state machine (serve/slot_stream.py) must be *semantics-
+free* infrastructure: for every model family and every ensemble width E,
+a request served through a SlotStream — mid-stream admission, chunked
+prefill, slot reuse and all — must emit exactly the tokens the same request
+produces alone through the batch ``generate`` path (greedy).  Three
+contracts are pinned here:
+
+(a) stream == solo generate, per family x E in {1, 3};
+(b) chunked-prefill admission == decode-only admission, token for token;
+(c) back-to-back requests through a REUSED slot == fresh-engine runs for
+    constant-state families (the slot state reset that lifts the
+    attention-families-only restriction).
+"""
+import copy
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import ensemble as ens
+from repro.core.cascade import TierSpec, prompt_chunks
+from repro.models import api
+from repro.models.params import unbox
+from repro.serve import (
+    CascadeServer,
+    CascadeTier,
+    Request,
+    ServingEngine,
+    SlotStream,
+    TierBackend,
+)
+
+_BASE = dict(n_layers=2, d_model=64, d_ff=128, vocab_size=64, remat=False)
+CONFIGS = {
+    "dense": ModelConfig(
+        name="ss-dense", family="dense", n_heads=4, n_kv_heads=2, **_BASE
+    ),
+    # capacity_factor >= n_experts -> no token ever drops, so MoE routing is
+    # per-token independent and every admission path is exactly equivalent
+    "moe": ModelConfig(
+        name="ss-moe", family="moe", n_heads=4, n_kv_heads=2, n_experts=4,
+        top_k=2, capacity_factor=4.0, **_BASE
+    ),
+    "moe_interleaved": ModelConfig(
+        name="ss-moe-il", family="moe", n_heads=4, n_kv_heads=2, n_experts=4,
+        top_k=2, moe_every=2, capacity_factor=4.0, **_BASE
+    ),
+    "ssm_mamba2": ModelConfig(
+        name="ss-mamba", family="ssm_mamba2", ssm_state=16, ssm_head_dim=32,
+        **_BASE
+    ),
+    "ssm_rwkv6": ModelConfig(
+        name="ss-rwkv", family="ssm_rwkv6", ssm_head_dim=32, rwkv_lora_rank=8,
+        **_BASE
+    ),
+    "hybrid": ModelConfig(
+        name="ss-hybrid", family="hybrid", n_heads=4, n_kv_heads=2,
+        ssm_state=16, ssm_head_dim=32, attn_every=2, **_BASE
+    ),
+}
+FAMILIES = list(CONFIGS)
+CONSTANT_STATE = ["ssm_mamba2", "ssm_rwkv6", "hybrid"]
+
+
+@pytest.fixture(scope="module")
+def stacks():
+    return {
+        f: unbox(ens.init_ensemble(cfg, 3, jax.random.PRNGKey(i)))[0]
+        for i, (f, cfg) in enumerate(CONFIGS.items())
+    }
+
+
+def _requests(seed, n, *, lo=4, hi=20, max_new=(2, 5)):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            tokens=rng.integers(0, 64, int(rng.integers(lo, hi))).astype(np.int32),
+            max_new_tokens=int(rng.integers(*max_new)),
+        )
+        for _ in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# (a) stream == solo generate, per family x E
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E", [1, 3])
+@pytest.mark.parametrize("family", FAMILIES)
+def test_stream_matches_solo_generate(family, E, stacks):
+    cfg = CONFIGS[family]
+    reqs = _requests(seed=100 + E, n=5)
+    if E == 1:
+        member = ens.take_member(stacks[family], 0)
+        eng = ServingEngine(cfg, member, max_seq=64)
+        done = eng.serve_continuous(
+            [copy.deepcopy(r) for r in reqs], n_slots=2
+        )
+        assert eng.last_stream_stats["chunk_calls"] > 0, (
+            "chunked-prefill admission must be exercised"
+        )
+        ref_eng = ServingEngine(cfg, member)
+        by_rid = {d.rid: d for d in done}
+        assert sorted(by_rid) == sorted(r.rid for r in reqs)
+        for r in reqs:
+            ref = ref_eng.generate(r.tokens[None, :], r.max_new_tokens)[0]
+            np.testing.assert_array_equal(ref, by_rid[r.rid].output)
+    else:
+        tier = CascadeTier(cfg, stacks[family], TierSpec("t", "vote", 0.67, k=3))
+        stream = SlotStream(
+            TierBackend(tier, n_slots=2, max_seq=64), n_slots=2, max_seq=64
+        )
+        stream.submit([copy.deepcopy(r) for r in reqs])
+        got = {r.rid: gen for r, gen in stream.drain()}
+        assert stream.stats["chunk_calls"] > 0
+        assert sorted(got) == sorted(r.rid for r in reqs)
+        for r in reqs:
+            # every member's stream row == that member's vmapped generation
+            ref = tier.generate(r.tokens[None, :], r.max_new_tokens)  # (E,1,T)
+            np.testing.assert_array_equal(ref[:, 0, :], got[r.rid])
+
+
+# ---------------------------------------------------------------------------
+# (b) chunked-prefill admission == decode-only admission
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_chunked_matches_decode_only_admission(family, stacks):
+    cfg = CONFIGS[family]
+    member = ens.take_member(stacks[family], 0)
+    eng = ServingEngine(cfg, member, max_seq=64)
+    # include a prompt long enough to need several pow2 buckets
+    reqs = _requests(seed=7, n=4, lo=4, hi=16)
+    reqs.append(
+        Request(
+            tokens=np.random.default_rng(8).integers(0, 64, 33).astype(np.int32),
+            max_new_tokens=4,
+        )
+    )
+    chunked = eng.serve_continuous(
+        [copy.deepcopy(r) for r in reqs], n_slots=2, chunked_prefill=True
+    )
+    assert eng.last_stream_stats["chunk_tokens"] >= 32
+    plain = eng.serve_continuous(
+        [copy.deepcopy(r) for r in reqs], n_slots=2, chunked_prefill=False
+    )
+    assert eng.last_stream_stats["chunk_calls"] == 0
+    a = {r.rid: r for r in chunked}
+    b = {r.rid: r for r in plain}
+    assert sorted(a) == sorted(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid].output, b[rid].output)
+
+
+# ---------------------------------------------------------------------------
+# (c) slot reuse isolation for constant-state families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunked", [True, False])
+@pytest.mark.parametrize("family", CONSTANT_STATE)
+def test_slot_reuse_matches_fresh_engine(family, chunked, stacks):
+    """n_slots=1 forces every request back-to-back through the SAME slot;
+    outputs must equal fresh-engine runs, proving the admitted slot's state
+    leaves are zeroed (SSM/RWKV state is not pos-masked)."""
+    cfg = CONFIGS[family]
+    assert api.has_slot_state(cfg)
+    member = ens.take_member(stacks[family], 0)
+    eng = ServingEngine(cfg, member, max_seq=64)
+    reqs = _requests(seed=21, n=3, max_new=(3, 5))
+    done = eng.serve_continuous(
+        [copy.deepcopy(r) for r in reqs], n_slots=1, chunked_prefill=chunked
+    )
+    by_rid = {d.rid: d for d in done}
+    ref_eng = ServingEngine(cfg, member)
+    for r in reqs:
+        ref = ref_eng.generate(r.tokens[None, :], r.max_new_tokens)[0]
+        np.testing.assert_array_equal(ref, by_rid[r.rid].output)
+
+
+# ---------------------------------------------------------------------------
+# chunk sizing: exact pow2 cover from the O(log S) bucket set
+# ---------------------------------------------------------------------------
+
+
+def test_prompt_chunks_exact_pow2_cover():
+    for n in (1, 2, 3, 7, 8, 20, 255, 256, 257, 1000):
+        sizes = prompt_chunks(n, max_chunk=256)
+        assert sum(sizes) == n, "prompt chunks must tile exactly (no overshoot)"
+        assert all(c & (c - 1) == 0 for c in sizes), "chunks must be pow2"
+        assert all(c <= 256 for c in sizes)
+    # a 256-token prompt admits in <= ceil(log2(256)) bucket calls
+    assert len(prompt_chunks(255)) <= math.ceil(math.log2(256))
+
+
+# ---------------------------------------------------------------------------
+# force-complete: the cache wall sets the truncated flag
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_flag_on_cache_wall(stacks):
+    cfg = CONFIGS["dense"]
+    member = ens.take_member(stacks["dense"], 0)
+    eng = ServingEngine(cfg, member, max_seq=16)
+    rng = np.random.default_rng(31)
+    big = Request(tokens=rng.integers(0, 64, 8).astype(np.int32), max_new_tokens=32)
+    small = Request(tokens=rng.integers(0, 64, 8).astype(np.int32), max_new_tokens=2)
+    done = {r.rid: r for r in eng.serve_continuous([big, small], n_slots=2)}
+    assert done[big.rid].truncated, "hitting pos >= max_seq-1 must flag truncation"
+    assert len(done[big.rid].output) < 32
+    assert not done[small.rid].truncated
+    assert len(done[small.rid].output) == 2
+
+
+# ---------------------------------------------------------------------------
+# cascade end-to-end: deferrals admitted mid-stream by the next tier
+# ---------------------------------------------------------------------------
+
+
+def test_cascade_defer_completes_exactly_once(stacks):
+    """Tier-0 members are independent (untrained -> essentially never
+    agree), so every request is deferred and re-admitted mid-stream into
+    tier-1 slots; each must complete exactly once with tier-1's answer.
+    Tier-0 is a constant-state RWKV tier — the lifted family restriction
+    in action."""
+    rw_cfg = CONFIGS["ssm_rwkv6"]
+    d_cfg = CONFIGS["dense"]
+    tier1 = CascadeTier(
+        d_cfg,
+        jax.tree.map(lambda v: v[:1], stacks["dense"]),
+        TierSpec("t1", "confidence", -1.0, k=1, cost=10.0),
+    )
+    server = CascadeServer([
+        CascadeTier(rw_cfg, stacks["ssm_rwkv6"], TierSpec("t0", "vote", 0.67, k=3)),
+        tier1,
+    ])
+    reqs = _requests(seed=41, n=5, lo=4, hi=10, max_new=(4, 5))
+    done = server.serve_continuous(
+        [copy.deepcopy(r) for r in reqs], n_slots=2, max_seq=32
+    )
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    assert all(r.tier == 1 for r in done), "untrained members never agree"
+    for r, d in zip(reqs, sorted(done, key=lambda x: x.rid)):
+        # the k=1 top tier's answer is member 0's own generation
+        ref = tier1.generate(r.tokens[None, :], r.max_new_tokens)[0, 0]
+        np.testing.assert_array_equal(ref, d.output)
+
+
+def test_cascade_agreement_answers_at_tier0(stacks):
+    """Identical tier-0 members always agree: nothing reaches tier-1."""
+    d_cfg = CONFIGS["dense"]
+    one = ens.take_member(stacks["dense"], 0)
+    same = jax.tree.map(lambda x: jax.numpy.stack([x, x, x]), one)
+    server = CascadeServer([
+        CascadeTier(d_cfg, same, TierSpec("t0", "vote", 0.9, k=3)),
+        CascadeTier(
+            d_cfg,
+            jax.tree.map(lambda v: v[:1], stacks["dense"]),
+            TierSpec("t1", "confidence", -1.0, k=1),
+        ),
+    ])
+    reqs = _requests(seed=43, n=4, lo=4, hi=10, max_new=(3, 4))
+    done = server.serve_continuous(
+        [copy.deepcopy(r) for r in reqs], n_slots=2, max_seq=32
+    )
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    assert all(r.tier == 0 for r in done)
+    eng = ServingEngine(d_cfg, one)
+    for r, d in zip(reqs, sorted(done, key=lambda x: x.rid)):
+        ref = eng.generate(r.tokens[None, :], r.max_new_tokens)[0]
+        np.testing.assert_array_equal(ref, d.output)
