@@ -12,6 +12,7 @@ from benchmarks.common import (
 from repro.core import calibration, deferral
 from repro.core.cascade import TierSpec, cascade_apply_routed
 from repro.core.cost_model import LAMBDA_GPU_PRICES, gpu_rental_cost
+from repro.serve.transport import LoopbackTransport
 
 
 def run(verbose=True):
@@ -46,11 +47,17 @@ def run(verbose=True):
     fns = []
     specs = []
     for i, (gpu, acc, k) in enumerate(tiers_def):
-        Lfull = tier_logits(i, logits, len(y))
-        fns.append(lambda b, L=Lfull: jax.numpy.asarray(L[:, b["idx"]]))
+        Lfull = jax.numpy.asarray(tier_logits(i, logits, len(y)))
+        fns.append(lambda b, L=Lfull: L[:, b["idx"]])
         rule = "vote" if k > 1 else "confidence"
         specs.append(TierSpec(gpu, rule, thetas[i], k=k, cost=float(10 ** i)))
-    res = cascade_apply_routed(fns, specs, {"idx": np.arange(len(y))}, pad_to=64)
+    # each GPU boundary is a metered hop: only the compacted deferral
+    # payload crosses, so tier-transition traffic is measured, not assumed
+    link = LoopbackTransport()
+    res = cascade_apply_routed(
+        fns, specs, {"idx": np.arange(len(y))}, pad_to=64,
+        transport=link, hosts=[t[0] for t in tiers_def],
+    )
 
     fracs = res.tier_counts / res.tier_counts.sum()
     gpus = [t[0] for t in tiers_def]
@@ -63,11 +70,15 @@ def run(verbose=True):
             print(f"# {g}: frac={f:.2f} (${LAMBDA_GPU_PRICES[g]}/h)")
         print(f"# ABC ${abc_cost:.2f}/h acc={acc_abc:.3f} vs single H100 "
               f"${single_cost:.2f}/h acc={acc_single:.3f}")
+        for h in link.hops:
+            print(f"# hop {h.src}->{h.dst}: {h.n_examples} deferred, "
+                  f"{h.payload_bytes/1e3:.1f}kB")
 
     L0 = jax.numpy.asarray(tier_logits(0, logits, len(y))[:, :256])
     us = time_op(jax.jit(lambda l: deferral.vote_rule(l, 0.67).score), L0)
     return csv_row(
         "fig4b_gpu_rental",
         us,
-        f"rental_cost_reduction={single_cost/abc_cost:.2f}x;tier1_frac={fracs[0]:.2f};acc_delta={acc_abc-acc_single:+.3f}",
+        f"rental_cost_reduction={single_cost/abc_cost:.2f}x;tier1_frac={fracs[0]:.2f};"
+        f"acc_delta={acc_abc-acc_single:+.3f};hop_bytes={link.total_bytes}",
     )

@@ -76,9 +76,20 @@ def sample_pool_logits(
     return y, d, out
 
 
+def smoke_mode() -> bool:
+    """CI fast mode (benchmarks/run.py --smoke): every bench still runs end
+    to end, but timing loops shrink to a correctness-only footprint."""
+    import os
+
+    return os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+
+
 def time_op(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
     """Median wall time in microseconds per call."""
     import jax
+
+    if smoke_mode():
+        repeats, warmup = min(repeats, 2), min(warmup, 1)
 
     def _block(r):
         try:

@@ -1,12 +1,20 @@
 """Benchmark harness: one entry per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (plus '#' commentary lines).
+Exits nonzero if ANY bench raises (each failure still prints its traceback
+and an ERROR row, so one rotten bench cannot hide behind the others).
+
+``--smoke``: fast verbose-off mode for CI — sets REPRO_BENCH_SMOKE=1
+(benchmarks.common trims timing repeats) and implies --quiet.  Smoke
+numbers are NOT representative timings; the mode exists so every scenario
+bench is executed on every push and cannot silently rot.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
@@ -28,14 +36,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
+    if args.smoke:
+        # must land in the environment BEFORE bench modules import
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        args.quiet = True
 
     names = [b for b in BENCHES if args.only is None or args.only in b]
     print("name,us_per_call,derived")
     failed = []
     for name in names:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         try:
+            # import inside the guard: an import-time failure is just as
+            # much a rotten bench as a run()-time one
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             row = mod.run(verbose=not args.quiet)
             print(row, flush=True)
         except Exception:

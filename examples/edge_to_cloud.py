@@ -65,3 +65,25 @@ for name, delay in EDGE_DELAYS.items():
     cm = EdgeCloudCost(delay=delay)
     a, c = cm.mean_latency(defer.mean()), cm.mean_latency(1.0)
     print(f"{name:12s} {a*1e3:10.3f}ms {c*1e3:10.3f}ms {c/a:9.1f}x")
+
+# -- the same boundary as a runtime object: place the tiers on simulated
+# edge/cloud hosts and let the serving path meter what actually crosses
+from repro.core.cascade import TierSpec
+from repro.serve import CascadeServer, CascadeTier, edge_cloud
+
+placement = edge_cloud(delay="medium")
+server = CascadeServer(
+    [
+        CascadeTier(EDGE, edge, TierSpec("edge", "vote", theta, k=3, cost=1.0)),
+        CascadeTier(CLOUD, cloud, TierSpec("cloud", "confidence", -1.0, k=1, cost=50.0)),
+    ],
+    placement=placement,
+)
+res = server.classify(test_toks[:256])
+link = placement.link(0)
+full_bytes = 256 * test_toks.shape[1] * 4
+print(f"\nmeasured over the edge->cloud link ({placement.describe()}):")
+print(f"  deferred {link.total_examples}/256 requests, "
+      f"{link.total_bytes/1e3:.1f} kB crossed vs {full_bytes/1e3:.1f} kB "
+      f"always-cloud ({full_bytes/max(1, link.total_bytes):.1f}x reduction), "
+      f"simulated link time {link.total_latency*1e3:.1f} ms")

@@ -8,10 +8,17 @@ Two execution forms:
     XLA program that lowers/shards on the production mesh — this is what the
     cascade dry-run compiles, and it doubles as the reference semantics.
 
-``cascade_apply_routed`` — host-routed compacting form: after tier i only the
-    deferred examples are gathered (padded to a multiple of ``pad_to``) and
-    sent to tier i+1.  This is the deployment path (serve/engine.py) and the
-    one whose measured cost reproduces Prop 4.1.2.
+``cascade_apply_routed`` — device-routed compacting form: after tier i only
+    the deferred examples flow to tier i+1.  Compaction (defer mask →
+    prefix-sum scatter → dense payload + index map) happens ON DEVICE in
+    the ``kernels/compaction`` Pallas kernel (or its interpret/XLA
+    fallback); the host only ever reads the scalar deferred COUNT to pick
+    bucket shapes — the payload itself never crosses device→host on the
+    defer path.  When tiers are placed on different hosts, the compacted
+    payload takes an explicit ``Transport`` hop (serve/transport.py) whose
+    bytes and latency are metered.  This is the deployment path
+    (serve/cascade_server.py) and the one whose measured cost reproduces
+    Prop 4.1.2.
 
 Both forms take per-tier callables ``tier_fns[i](batch_slice) -> logits
 (E_i, B, V)`` so they work for classifier heads, prefill last-token logits,
@@ -27,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import deferral
+from repro.kernels.compaction import ops as compaction_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,10 +139,49 @@ def prompt_chunks(n: int, max_chunk: int = 256) -> List[int]:
 
 
 def _pad_rows(x, n):
+    """Edge-pad a device array's leading axis to ``n`` rows."""
     if x.shape[0] == n:
         return x
-    pad = [(0, n - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
-    return np.pad(x, pad, mode="edge")
+    pad = x.shape[0]
+    reps = [n - pad] + [1] * (x.ndim - 1)
+    return jnp.concatenate([x, jnp.tile(x[-1:], reps)], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# host-fetch accounting: every INTENTIONAL device→host read in the routed
+# cascade goes through _fetch (explicit jax.device_get, transfer-guard
+# clean) and is byte-metered, so tests can assert the defer path moves
+# only scalar counts + final results to the host — never payload.
+# ---------------------------------------------------------------------------
+
+_FETCH_STATS = {"bytes": 0, "calls": 0}
+
+
+def host_fetch_stats() -> dict:
+    return dict(_FETCH_STATS)
+
+
+def reset_host_fetch_stats() -> None:
+    _FETCH_STATS["bytes"] = 0
+    _FETCH_STATS["calls"] = 0
+
+
+def _fetch(tree):
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "dtype"):
+            _FETCH_STATS["bytes"] += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    _FETCH_STATS["calls"] += 1
+    return jax.device_get(tree)
+
+
+def _colocate(x, ref):
+    """Re-place ``x`` next to ``ref`` (device→device, never via host) so
+    result accumulators can merge per-tier answers produced on other hosts'
+    device sets (pod placement)."""
+    xs, rs = getattr(x, "sharding", None), getattr(ref, "sharding", None)
+    if xs is not None and rs is not None and xs != rs:
+        return jax.device_put(x, rs)
+    return x
 
 
 def cascade_apply_routed(
@@ -143,68 +190,131 @@ def cascade_apply_routed(
     batch: dict,
     *,
     pad_to: int = 8,
+    transport=None,
+    hosts: Optional[Sequence[str]] = None,
 ) -> CascadeResult:
-    """Host-routed cascade with batch compaction between tiers.
+    """Device-routed cascade with ON-DEVICE batch compaction between tiers.
 
-    ``batch`` is a dict of numpy/jax arrays with a leading example axis.
-    Only deferred examples flow to the next tier, re-batched into greedy
-    power-of-two bucket chunks (floor ``pad_to``, see ``bucket_chunks``) so
-    tier transitions re-enter already-compiled programs instead of
-    triggering one compilation per deferred-count.  Cost accounting:
-    spec.cost · examples evaluated (the chunk padding is charged too — that
-    is the real serving cost).
+    ``batch`` is a dict of numpy/jax arrays with a leading example axis; it
+    is moved to device once and never gathered back on host.  After each
+    tier, the defer mask drives the ``kernels/compaction`` prefix-sum
+    scatter (Pallas on TPU, interpret/XLA fallback elsewhere): deferred
+    examples become a dense payload + index map without leaving HBM.  The
+    host reads exactly ONE scalar per tier transition (the deferred count,
+    via an explicit transfer) to choose greedy power-of-two bucket chunks
+    (floor ``pad_to``, see ``bucket_chunks``) so tier transitions re-enter
+    already-compiled programs.
+
+    ``transport`` (optional) is a serve/transport.py backend — either one
+    Transport applied to every tier boundary or a per-hop sequence (None
+    entries = same-host hops).  Only the compacted deferral payload (padded
+    to its bucket cover) is sent, which is what makes the §5.2 scenario
+    benches report MEASURED bytes-over-link.  ``hosts`` names the per-tier
+    placement for hop metering (defaults to tier names).
+
+    Cost accounting: spec.cost · examples evaluated (the chunk padding is
+    charged too — that is the real serving cost).
     """
-    B = int(jax.tree.leaves(batch)[0].shape[0])
     n = len(tier_fns)
-    pred = np.zeros((B,), np.int32)
-    tier_of = np.full((B,), -1, np.int32)
-    scores = np.zeros((B,), np.float32)
-    tier_counts = np.zeros((n,), np.int64)
+    cur = {k: jnp.asarray(v) for k, v in batch.items()}
+    B = int(jax.tree.leaves(cur)[0].shape[0])
+    hop_transports = (
+        list(transport) if isinstance(transport, (list, tuple))
+        else [transport] * (n - 1)
+    )
+    assert len(hop_transports) >= n - 1, (len(hop_transports), n)
+    hop_names = list(hosts) if hosts is not None else [s.name for s in specs]
+
+    pred = jnp.zeros((B,), jnp.int32)
+    tier_of = jnp.full((B,), -1, jnp.int32)
+    scores = jnp.zeros((B,), jnp.float32)
+    tier_counts_dev: List[jax.Array] = []
     evaluated = np.zeros((n,), np.int64)
     cost = 0.0
 
-    active = np.arange(B)
-    cur = {k: np.asarray(v) for k, v in batch.items()}
+    active_idx = jnp.arange(B, dtype=jnp.int32)  # local row -> original row
+    m = B
     for i, (fn, spec) in enumerate(zip(tier_fns, specs)):
-        m = len(active)
         defer_c, p_c, s_c = [], [], []
         charged = 0
         off = 0
         for c in bucket_chunks(m, pad_to):
             take = min(c, m - off)
-            fed = {k: _pad_rows(v[off : off + take], c) for k, v in cur.items()}
+            fed = {
+                k: _pad_rows(jax.lax.slice_in_dim(v, off, off + take), c)
+                for k, v in cur.items()
+            }
             logits = fn(fed)
             out = deferral.apply_rule(spec.rule, logits, spec.theta)
-            defer_c.append(np.asarray(out.defer)[:take])
-            p_c.append(np.asarray(out.pred)[:take])
-            s_c.append(np.asarray(out.score)[:take])
+            defer_c.append(out.defer[:take])
+            p_c.append(out.pred[:take])
+            s_c.append(out.score[:take])
             charged += c
             off += take
-        defer = np.concatenate(defer_c)
-        p = np.concatenate(p_c)
-        s = np.concatenate(s_c)
+        defer = jnp.concatenate(defer_c) if len(defer_c) > 1 else defer_c[0]
+        p = jnp.concatenate(p_c) if len(p_c) > 1 else p_c[0]
+        s = jnp.concatenate(s_c) if len(s_c) > 1 else s_c[0]
         evaluated[i] = charged
         cost += spec.cost * charged
 
         last = i == n - 1
-        take = ~defer | last
-        idx = active[take]
-        pred[idx] = p[take]
-        tier_of[idx] = i
-        scores[idx] = s[take]
-        tier_counts[i] = take.sum()
+        take_m = jnp.logical_or(~defer, jnp.bool_(last))
+        # scatter this tier's answers to their original rows (device-side;
+        # answers produced on another host's pod slice hop back d2d first)
+        take_l, p_l, s_l, idx_l = (
+            _colocate(t, pred) for t in (take_m, p, s, active_idx)
+        )
+        pred = pred.at[idx_l].set(jnp.where(take_l, p_l, pred[idx_l]))
+        tier_of = tier_of.at[idx_l].set(
+            jnp.where(take_l, jnp.int32(i), tier_of[idx_l])
+        )
+        scores = scores.at[idx_l].set(
+            jnp.where(take_l, s_l, scores[idx_l])
+        )
+        tier_counts_dev.append(jnp.sum(take_m))
 
-        if last or not (~take).any():
+        if last:
             break
-        keep = ~take
-        active = active[keep]
-        cur = {k: v[:m][keep] for k, v in cur.items()}
+        # on-device compaction of the defer path: dense payload + index map
+        # straight from the mask — no host gather, no re-pad on host.
+        # (cur may carry bucket-padding rows from the previous hop; the
+        # mask covers only the m real rows)
+        real = {
+            k: v if v.shape[0] == m else jax.lax.slice_in_dim(v, 0, m)
+            for k, v in cur.items()
+        }
+        ctree, index_map, count = compaction_ops.compact_tree(
+            {**real, "__idx": active_idx}, defer
+        )
+        n_defer = int(_fetch(count))  # the ONLY per-tier host read: a scalar
+        if n_defer == 0:
+            break
+        n_padded = sum(bucket_chunks(n_defer, pad_to))
+        n_padded = min(n_padded, m)  # payload rows physically available
+        payload = {
+            k: jax.lax.slice_in_dim(v, 0, n_padded) for k, v in ctree.items()
+        }
+        tr = hop_transports[i]
+        if tr is not None:
+            payload = tr.send(
+                hop_names[i], hop_names[i + 1], payload, n_examples=n_defer
+            )
+            payload = {k: jnp.asarray(v) for k, v in payload.items()}
+        active_idx = payload.pop("__idx")[:n_defer]
+        cur = payload
+        m = n_defer
 
+    while len(tier_counts_dev) < n:
+        tier_counts_dev.append(jnp.zeros((), jnp.int32))
+    # per-tier counts may live on different hosts' devices — fetch as-is
+    pred_h, tier_h, scores_h, counts_h = _fetch(
+        (pred, tier_of, scores, tier_counts_dev)
+    )
     return CascadeResult(
-        pred=pred,
-        tier_of=tier_of,
-        scores=scores,
-        tier_counts=tier_counts,
+        pred=np.asarray(pred_h),
+        tier_of=np.asarray(tier_h),
+        scores=np.asarray(scores_h),
+        tier_counts=np.asarray(counts_h, np.int64),
         evaluated=evaluated,
         cost=cost,
     )

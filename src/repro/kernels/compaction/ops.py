@@ -1,0 +1,139 @@
+"""Dispatching wrapper for deferral compaction.
+
+``compact(x, mask)`` turns a defer mask into a dense compacted payload plus
+an index map WITHOUT the payload ever visiting the host:
+
+  out (B, ...)      rows [0, count) are the deferred rows of ``x`` in
+                    original order; rows past the count are zero padding
+  index_map (B,)    original row index per output row, -1 past the count
+  count ()          number of deferred rows (the only thing a host-side
+                    router ever needs to fetch)
+
+``compact_tree`` applies the same mask to every leaf of a batch pytree (one
+kernel pass per leaf — each leaf is read from HBM exactly once) and
+``scatter_back`` is the inverse permutation for per-example results.
+Float payloads ride the kernel's one-hot f32 matmul (exact for f32/bf16
+inputs); integer payloads (token ids, hashes) are compacted by a device
+row-gather over the kernel's index map instead, so they are exact at ANY
+value — the f32 route would round above 2**24.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import config as kcfg
+
+
+def _xla_compact(x2: jax.Array, mask: jax.Array):
+    """Vectorized scatter form (what the multi-device dry-run lowers):
+    every row writes either its prefix-sum destination or a sacrificial
+    row B that is sliced off.  (ref.py holds the naive row-loop oracle.)"""
+    B = x2.shape[0]
+    m = mask.astype(jnp.int32)
+    pos = jnp.cumsum(m) - m
+    dst = jnp.where(mask, pos, B)
+    out = jnp.zeros((B + 1, x2.shape[1]), x2.dtype).at[dst].set(x2)[:B]
+    index_map = (
+        jnp.full((B + 1,), -1, jnp.int32)
+        .at[dst]
+        .set(jnp.arange(B, dtype=jnp.int32))[:B]
+    )
+    return out, index_map, jnp.sum(m)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return max(mult, ((n + mult - 1) // mult) * mult)
+
+
+def _kernel_compact(x2: jax.Array, mask: jax.Array, impl: str):
+    from repro.kernels.compaction import kernel as _kernel
+
+    B, D = x2.shape
+    Bp, Dp = _pad_to(B, 8), _pad_to(D, 128)
+    # block_d must divide the padded width; 128 always does
+    block_d = max(b for b in (512, 256, 128) if Dp % b == 0)
+    xp = jnp.pad(x2.astype(jnp.float32), ((0, Bp - B), (0, Dp - D)))
+    mp = jnp.pad(mask.astype(jnp.int32), (0, Bp - B))
+    out, index_map, count = _kernel.compact_pallas(
+        xp, mp, block_d=block_d, interpret=(impl == "pallas_interpret")
+    )
+    return out[:B, :D], index_map[:B], count
+
+
+def compact(x: jax.Array, mask: jax.Array):
+    """x: (B, ...); mask: (B,) bool.  Returns (out, index_map, count) with
+    ``out`` shaped and typed like ``x`` (deferred rows dense at the front,
+    zeros past the count).  All three live on device."""
+    B = x.shape[0]
+    trail = x.shape[1:]
+    D = int(np.prod(trail)) if trail else 1
+    x2 = x.reshape(B, D)
+    impl = kcfg.get_impl()
+    if impl == "xla":
+        out, index_map, count = _xla_compact(x2, mask)
+    elif jnp.issubdtype(x.dtype, jnp.integer):
+        # exact integer route: index map from the kernel, payload rows by
+        # device gather (the f32 matmul would round values >= 2**24)
+        index_map, count = compact_indices(mask)
+        out = _gather_rows(x2, index_map)
+    else:
+        out, index_map, count = _kernel_compact(x2, mask, impl)
+        out = out.astype(x.dtype)
+    return out.reshape((B,) + trail), index_map, count
+
+
+def compact_indices(mask: jax.Array):
+    """(index_map (B,), count ()) without touching any payload — the
+    kernel runs on a 1-wide dummy column (integer leaves route through
+    this, then gather their rows exactly)."""
+    impl = kcfg.get_impl()
+    dummy = jnp.zeros((mask.shape[0], 1), jnp.float32)
+    if impl == "xla":
+        _, index_map, count = _xla_compact(dummy, mask)
+    else:
+        _, index_map, count = _kernel_compact(dummy, mask, impl)
+    return index_map, count
+
+
+def _gather_rows(x: jax.Array, index_map: jax.Array):
+    """Compacted payload by device row-gather over a precomputed index map
+    (exact for every dtype; rows past the count come out zero)."""
+    B = x.shape[0]
+    trail = x.shape[1:]
+    x2 = x.reshape(B, int(np.prod(trail)) if trail else 1)
+    safe = jnp.where(index_map >= 0, index_map, 0)
+    out = jnp.where((index_map >= 0)[:, None], x2[safe], 0)
+    return out.reshape((B,) + trail)
+
+
+def compact_tree(tree, mask: jax.Array):
+    """Compact every (B, ...) leaf of ``tree`` under one defer mask.
+    Returns (compacted tree, index_map (B,), count).
+
+    Float leaves take the kernel's single-HBM-pass matmul route, whose
+    first pass yields the index map as a free byproduct; integer leaves
+    gather through that shared map (exact at any value).  The dedicated
+    dummy-column index pass only runs for an all-integer tree."""
+    leaves, treedef = jax.tree.flatten(tree)
+    outs = [None] * len(leaves)
+    index_map = count = None
+    for i, leaf in enumerate(leaves):
+        if not jnp.issubdtype(leaf.dtype, jnp.integer):
+            outs[i], index_map, count = compact(leaf, mask)
+    if index_map is None:
+        index_map, count = compact_indices(mask)
+    for i, leaf in enumerate(leaves):
+        if outs[i] is None:
+            outs[i] = _gather_rows(leaf, index_map)
+    return treedef.unflatten(outs), index_map, count
+
+
+def scatter_back(values: jax.Array, index_map: jax.Array, total: int):
+    """Place compacted per-example results back at their original rows:
+    ``out[index_map[d]] = values[d]`` for every d with index_map[d] >= 0.
+    A (B,)-sized scatter, not a feature sweep — plain XLA on every impl."""
+    dst = jnp.where(index_map >= 0, index_map, total)
+    out = jnp.zeros((total + 1,) + values.shape[1:], values.dtype)
+    return out.at[dst].set(values)[:total]

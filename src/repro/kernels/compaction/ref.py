@@ -1,0 +1,51 @@
+"""Naive oracle for deferral compaction.
+
+Given a payload ``x`` (B, D) and a defer mask (B,), produce the dense
+compacted payload: row ``d`` of the output is the ``d``-th deferred row of
+``x`` (original order preserved), rows past the deferred count are zero.
+Alongside it, the index map back into the original batch:
+
+  out[d]        = x[index_map[d]]            for d <  count
+  index_map[d]  = original row index         for d <  count, else -1
+  count         = mask.sum()
+
+Deliberately a host-side python row loop — clearly correct by inspection
+and structurally unlike both the ops.py scatter form and the kernel's
+one-hot matmul, so the parity tests compare three independent
+implementations.  Shapes are static (out is (B, D)): the real paths jit,
+and callers slice ``out[:bucket(count)]`` after reading only the count.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def compact_ref(x, mask):
+    """x: (B, D...); mask: (B,) bool.  Returns (out (B, ...), index_map
+    (B,), count) as device arrays computed by a naive host loop."""
+    xs = np.asarray(x)
+    ms = np.asarray(mask).astype(bool)
+    B = xs.shape[0]
+    out = np.zeros_like(xs)
+    index_map = np.full((B,), -1, np.int32)
+    d = 0
+    for i in range(B):
+        if ms[i]:
+            out[d] = xs[i]
+            index_map[d] = i
+            d += 1
+    return jnp.asarray(out), jnp.asarray(index_map), jnp.asarray(d, jnp.int32)
+
+
+def scatter_back_ref(values, index_map, total: int):
+    """Inverse of ``compact_ref`` for result rows: place ``values[d]`` at
+    original index ``index_map[d]`` in a (total, ...) buffer (rows whose
+    index_map is -1 are dropped).  Naive host loop."""
+    vs = np.asarray(values)
+    im = np.asarray(index_map)
+    out = np.zeros((total,) + vs.shape[1:], vs.dtype)
+    for d in range(vs.shape[0]):
+        if im[d] >= 0:
+            out[im[d]] = vs[d]
+    return jnp.asarray(out)

@@ -60,7 +60,7 @@ def decode_attention(
     )
 
 
-def _xla_decode_bksd(q, k_cache, v_cache, cur_len, *, window, softcap):
+def _xla_decode_bksd(q, k_cache, v_cache, cur_len, *, window, softcap, starts=None):
     B, _, H, hd = q.shape
     KVH, S = k_cache.shape[1], k_cache.shape[2]
     G = H // KVH
@@ -78,6 +78,8 @@ def _xla_decode_bksd(q, k_cache, v_cache, cur_len, *, window, softcap):
     if window is not None:
         lo = (cur - window)[..., None] if cur.ndim else cur - window
         mask = mask & (cols[None, :] >= lo)
+    if starts is not None:  # left-pad carve-out (per-request prompt starts)
+        mask = mask & (cols[None, :] >= jnp.asarray(starts)[:, None])
     s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
@@ -92,14 +94,19 @@ def decode_attention_bksd(
     *,
     window: Optional[int] = None,
     softcap: Optional[float] = None,
+    starts: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Decode attention over caches stored sequence-innermost — the layout
     the Pallas kernel streams directly, so no per-step transpose of the full
-    cache exists on any path (§Perf iteration 1)."""
+    cache exists on any path (§Perf iteration 1).  ``starts`` (B,) masks
+    columns before each request's prompt start (left-padded batches); it is
+    served by the XLA path — the Pallas kernel keeps the starts-free
+    serving shapes."""
     impl = kcfg.get_impl()
-    if impl == "xla":
+    if impl == "xla" or starts is not None:
         return _xla_decode_bksd(
-            q, k_cache, v_cache, cur_len, window=window, softcap=softcap
+            q, k_cache, v_cache, cur_len, window=window, softcap=softcap,
+            starts=starts,
         )
     B, _, H, hd = q.shape
     KVH = k_cache.shape[1]

@@ -25,7 +25,7 @@ from repro.kernels.flash_attention import kernel as _kernel
 
 def _xla_flash(
     q, k, v, *, causal, window, softcap, q_offset=0, block_q: int = 512,
-    return_lse: bool = False,
+    return_lse: bool = False, starts=None,
 ):
     B, Sq, H, hd = q.shape
     _, Sk, KVH, _ = k.shape
@@ -65,7 +65,12 @@ def _xla_flash(
             mask &= cols <= rows
         if window is not None:
             mask &= (rows - cols) < window
-        if causal or window is not None:
+        if starts is not None:
+            # left-pad carve-out: row b's tokens never attend before its
+            # prompt start — a per-batch (B, bq, kv) mask
+            maskb = mask[None] & (cols[None] >= starts[:, None, None])
+            s = jnp.where(maskb[:, None, None], s, -1e30)
+        elif causal or window is not None:
             s = jnp.where(mask[None, None, None], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bkgqs,bskd->bqkgd", p, v_sl.astype(jnp.float32))
@@ -175,8 +180,19 @@ def flash_attention(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     q_offset: int = 0,
+    starts: Optional[jax.Array] = None,
 ) -> jax.Array:
+    """``starts`` (B,) int32, optional: per-request prompt starts for
+    left-padded batches — row b attends no column < starts[b] (the serving
+    engine's pad carve-out).  Inference-only (routes around the custom_vjp)
+    and handled on the XLA path; the Pallas kernel serves the starts-free
+    shapes."""
     impl = kcfg.get_impl()
+    if starts is not None:
+        return _xla_flash(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, starts=jnp.asarray(starts, jnp.int32),
+        )
     if impl == "xla":
         if q_offset == 0:
             return _flash_diff(q, k, v, causal, window, softcap)

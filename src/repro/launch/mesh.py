@@ -20,3 +20,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def pod_submeshes(mesh, n_slices: int):
+    """Carve a mesh with a leading 'pod' axis into ``n_slices`` contiguous
+    pod slices (DESIGN.md §3: tier placement).  Each slice keeps a 'pod'
+    axis (its share of pods) so a tier's 'ensemble' logical axis still maps
+    onto it; distinct slices own disjoint device sets."""
+    from jax.sharding import Mesh
+
+    assert mesh.axis_names[0] == "pod", mesh.axis_names
+    n_pods = mesh.devices.shape[0]
+    assert n_pods % n_slices == 0, (n_pods, n_slices)
+    per = n_pods // n_slices
+    return [
+        Mesh(mesh.devices[i * per : (i + 1) * per], mesh.axis_names)
+        for i in range(n_slices)
+    ]

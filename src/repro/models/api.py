@@ -141,18 +141,29 @@ def backbone_fwd(
     train: bool,
     window_override: Optional[int] = None,
     collect_kv: bool = False,
+    positions=None,
+    starts=None,
 ):
-    """Returns (x, aux_loss, kv_stack_or_None)."""
+    """Returns (x, aux_loss, kv_stack_or_None).
+
+    ``positions``/``starts`` carry the per-request left-pad carve-out
+    (serve/engine.py): attention-family layers offset RoPE per row and mask
+    columns before each row's prompt start.  Recurrent families sweep the
+    sequence unconditionally, so the carve-out cannot apply there."""
     fam = cfg.family
     window = window_override if window_override is not None else cfg.sliding_window
     B, S, D = x.shape
+    assert starts is None or fam in ("dense", "moe", "vlm"), (
+        f"left-pad carve-out unsupported for family {fam}"
+    )
 
     if fam in ("dense", "moe", "vlm", "encoder") and not _interleaved_moe(cfg):
 
         def body(carry, lp):
             h, aux = carry
             h, a, kv = BD.dense_layer_fwd(
-                lp, h, cfg, causal=not cfg.is_encoder, sliding_window=window
+                lp, h, cfg, causal=not cfg.is_encoder, sliding_window=window,
+                positions=positions, starts=starts,
             )
             return (h, aux + a), (kv if collect_kv else None)
 
@@ -171,7 +182,10 @@ def backbone_fwd(
         )
 
         def one(h, lp):
-            h, a, kv = BD.dense_layer_fwd(lp, h, cfg, causal=True, sliding_window=window)
+            h, a, kv = BD.dense_layer_fwd(
+                lp, h, cfg, causal=True, sliding_window=window,
+                positions=positions, starts=starts,
+            )
             return h, (a, kv if collect_kv else None)
 
         def body(carry, lps):
@@ -179,7 +193,8 @@ def backbone_fwd(
             lp_d, lp_m = lps
             h, (a_d, kv_d) = jax.lax.scan(one, h, lp_d)
             h, a_m, kv_m = BD.dense_layer_fwd(
-                lp_m, h, cfg, causal=True, sliding_window=window
+                lp_m, h, cfg, causal=True, sliding_window=window,
+                positions=positions, starts=starts,
             )
             ys = (kv_d, kv_m) if collect_kv else None
             return (h, aux + a_d.sum() + a_m), ys
@@ -328,10 +343,32 @@ def loss_fn(params, batch, cfg: ModelConfig, *, window_override=None):
     return loss, {"ce": ce, "z_loss": zl, "acc": acc, "aux": aux}
 
 
+def _pad_carveout(batch, S, cfg: ModelConfig):
+    """(positions, starts) for a left-padded batch, or (None, None).
+    ``batch['starts']`` (B,) marks each row's prompt start; positions are
+    taken relative to it so RoPE matches the unpadded run.  Starts index
+    the TOKEN grid, so a prepended vision prefix would shift every column
+    the mask refers to — reject that combination instead of silently
+    masking the wrong columns."""
+    starts = batch.get("starts")
+    if starts is None:
+        return None, None
+    assert not (cfg.n_vision_tokens and "embeds" in batch), (
+        "left-pad carve-out indexes token columns; unsupported with a "
+        "prepended vision prefix"
+    )
+    starts = jnp.asarray(starts, jnp.int32)
+    return jnp.arange(S)[None, :] - starts[:, None], starts
+
+
 def forward_logits(params, batch, cfg: ModelConfig, *, window_override=None):
     """Full logits (B, S, V) — small models / ABC ensembles only."""
     x = embed_inputs(params, batch, cfg)
-    x, _, _ = backbone_fwd(params, x, cfg, train=False, window_override=window_override)
+    positions, starts = _pad_carveout(batch, x.shape[1], cfg)
+    x, _, _ = backbone_fwd(
+        params, x, cfg, train=False, window_override=window_override,
+        positions=positions, starts=starts,
+    )
     x = L.apply_norm(params["final_norm"], x, cfg)
     if cfg.n_vision_tokens and "embeds" in batch:
         x = x[:, cfg.n_vision_tokens :, :]
@@ -422,12 +459,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
 
 
 def prefill(params, batch, cfg: ModelConfig, *, window_override=None):
-    """Forward the prompt, return (last-token logits (B, V), cache values)."""
+    """Forward the prompt, return (last-token logits (B, V), cache values).
+    ``batch['starts']`` (B,), optional, activates the left-pad carve-out
+    for attention families (per-row RoPE offset + pad masking)."""
     x = embed_inputs(params, batch, cfg)
     B, S, _ = x.shape
+    positions, starts = _pad_carveout(batch, S, cfg)
     x, _, states = backbone_fwd(
         params, x, cfg, train=False, window_override=window_override,
-        collect_kv=True,
+        collect_kv=True, positions=positions, starts=starts,
     )
     xl = L.apply_norm(params["final_norm"], x[:, -1:, :], cfg)
     head = params["lm_head"] if "lm_head" in params else params["embed"].T
@@ -475,14 +515,19 @@ def decode_step(
     *,
     window_override=None,
     embeds=None,
+    starts=None,
 ):
     """One new token with a KV/SSM cache.
 
     token: (B, 1) int32; pos: scalar int32 position of the new token;
-    cache: values tree from ``init_cache``/``prefill``.
-    Returns (logits (B, V), new_cache)."""
+    cache: values tree from ``init_cache``/``prefill``; starts: (B,)
+    optional per-request prompt starts (left-pad carve-out — attention
+    families only).  Returns (logits (B, V), new_cache)."""
     window = window_override if window_override is not None else cfg.sliding_window
     fam = cfg.family
+    assert starts is None or fam in ("dense", "moe", "vlm"), (
+        f"left-pad carve-out unsupported for family {fam}"
+    )
     x = params["embed"][token]  # (B, 1, D)
     x = constrain(x, ("act_batch", None, "act_embed"))
 
@@ -491,7 +536,7 @@ def decode_step(
         def body(h, inp):
             lp, kc, vc = inp
             h, (kc, vc) = BD.dense_layer_decode(
-                lp, h, cfg, kc, vc, pos, sliding_window=window
+                lp, h, cfg, kc, vc, pos, sliding_window=window, starts=starts
             )
             return h, (kc, vc)
 
@@ -516,7 +561,7 @@ def decode_step(
         def one(h, inp):
             lp, kc, vc = inp
             h, (kc, vc) = BD.dense_layer_decode(
-                lp, h, cfg, kc, vc, pos, sliding_window=window
+                lp, h, cfg, kc, vc, pos, sliding_window=window, starts=starts
             )
             return h, (kc, vc)
 
@@ -527,7 +572,7 @@ def decode_step(
             )
             h, (km, vm) = BD.dense_layer_decode(
                 lp_m, h, cfg, cg["k"][me - 1], cg["v"][me - 1], pos,
-                sliding_window=window,
+                sliding_window=window, starts=starts,
             )
             k_new = jnp.concatenate([kd, km[None]], axis=0)
             v_new = jnp.concatenate([vd, vm[None]], axis=0)

@@ -33,6 +33,7 @@ def dense_layer_fwd(
     causal: bool = True,
     sliding_window: Optional[int] = None,
     positions=None,
+    starts=None,
 ):
     """Full-sequence forward.  Returns (x, aux_loss, (k, v))."""
     h, kv = L.attention_layer(
@@ -42,6 +43,7 @@ def dense_layer_fwd(
         causal=causal,
         positions=positions,
         sliding_window=sliding_window,
+        starts=starts,
     )
     x = x + h
     aux = jnp.float32(0.0)
@@ -93,6 +95,7 @@ def dense_layer_decode(
     cur_index,
     *,
     sliding_window: Optional[int] = None,
+    starts=None,
 ):
     """Single-token decode.  x: (B, 1, D).  Returns (x, (k_cache, v_cache))."""
     h, caches = L.attention_decode(
@@ -103,6 +106,7 @@ def dense_layer_decode(
         v_cache,
         cur_index,
         sliding_window=sliding_window,
+        starts=starts,
     )
     x = x + h
     if "moe" in p:

@@ -163,8 +163,14 @@ def attention_layer(
     positions=None,
     use_rope: bool = True,
     sliding_window: Optional[int] = None,
+    starts=None,
 ):
-    """Full-sequence (train / prefill) attention. Returns (out, (k, v))."""
+    """Full-sequence (train / prefill) attention. Returns (out, (k, v)).
+
+    ``starts`` (B,) optional per-request prompt starts: with left-padded
+    batches row b's tokens are masked from attending columns < starts[b],
+    and the caller is expected to pass positions offset per row so RoPE
+    matches the unpadded run (serve/engine.py's pad carve-out)."""
     from repro.kernels.flash_attention import ops as flash_ops
 
     B, S, _ = x.shape
@@ -172,7 +178,8 @@ def attention_layer(
         positions = jnp.arange(S)[None, :]
     q, k, v = qkv_project(p, x, cfg, positions, use_rope=use_rope)
     ctx = flash_ops.flash_attention(
-        q, k, v, causal=causal, window=sliding_window, softcap=cfg.attn_logit_softcap
+        q, k, v, causal=causal, window=sliding_window,
+        softcap=cfg.attn_logit_softcap, starts=starts,
     )
     return attn_output(p, ctx, cfg), (k, v)
 
@@ -187,11 +194,16 @@ def attention_decode(
     *,
     use_rope: bool = True,
     sliding_window: Optional[int] = None,
+    starts=None,
 ):
     """Single-token decode.  Caches use the kernel-native layout
     (B, K, S_max, hd) — sequence-innermost, so the per-step update writes one
     (B, K, 1, hd) slice and the attention sweep streams the cache with NO
-    transpose (§Perf iteration 1).  Returns (out, (k_cache, v_cache))."""
+    transpose (§Perf iteration 1).  ``starts`` (B,) carries the left-pad
+    carve-out through decode: cache columns before a request's prompt start
+    stay invisible and RoPE positions are taken relative to the start, so
+    a left-padded generation step matches the solo run token-for-token.
+    Returns (out, (k_cache, v_cache))."""
     from repro.kernels.decode_attention import ops as dec_ops
 
     B = x.shape[0]
@@ -200,6 +212,8 @@ def attention_decode(
     positions = (
         cur_index[:, None] if vector_pos else jnp.full((B, 1), cur_index)
     )
+    if starts is not None:
+        positions = positions - jnp.asarray(starts)[:, None]
     q, k, v = qkv_project(p, x, cfg, positions, use_rope=use_rope)
     if vector_pos:
         # scatter one token per sequence at its own position
@@ -213,8 +227,12 @@ def attention_decode(
         ctx = dec_ops.decode_attention_bksd(
             q, k_cache, v_cache, cur_len=cur_index + 1,
             window=sliding_window, softcap=cfg.attn_logit_softcap,
+            starts=starts,
         )
         return attn_output(p, ctx, cfg), (k_cache, v_cache)
+    assert starts is None or not LEGACY_DECODE, (
+        "left-pad carve-out requires the kernel-native decode path"
+    )
     if LEGACY_DECODE:  # (B, S, K, hd) cache + per-step transpose
         k_cache = jax.lax.dynamic_update_slice_in_dim(
             k_cache, k.astype(k_cache.dtype), cur_index, axis=1
@@ -238,6 +256,7 @@ def attention_decode(
         cur_len=cur_index + 1,
         window=sliding_window,
         softcap=cfg.attn_logit_softcap,
+        starts=starts,
     )
     return attn_output(p, ctx, cfg), (k_cache, v_cache)
 

@@ -2,6 +2,18 @@ from repro.serve.batching import Request, RequestQueue
 from repro.serve.engine import ServingEngine
 from repro.serve.slot_stream import EngineBackend, SlotStream, TierBackend
 from repro.serve.cascade_server import CascadeServer, CascadeTier
+from repro.serve.placement import (
+    Host,
+    TierPlacement,
+    edge_cloud,
+    pod_placement,
+    single_host,
+)
+from repro.serve.transport import (
+    LoopbackTransport,
+    SimulatedLinkTransport,
+    Transport,
+)
 
 __all__ = [
     "Request",
@@ -12,4 +24,12 @@ __all__ = [
     "TierBackend",
     "CascadeServer",
     "CascadeTier",
+    "Host",
+    "TierPlacement",
+    "single_host",
+    "edge_cloud",
+    "pod_placement",
+    "Transport",
+    "LoopbackTransport",
+    "SimulatedLinkTransport",
 ]

@@ -56,12 +56,23 @@ class RequestQueue:
     def pad_batch(self, batch: List[Request]):
         """Returns (tokens (B', S') int32, n_real) with B'/S' padded to
         powers of two (B' also padded so jit programs are reused)."""
+        toks, _, n = self.pad_batch_with_starts(batch)
+        return toks, n
+
+    def pad_batch_with_starts(self, batch: List[Request]):
+        """Like ``pad_batch`` but also returns the per-row prompt starts
+        (B',) int32 — row i's prompt occupies columns [starts[i], S'); the
+        engine feeds these to the attention left-pad carve-out so padded
+        rows cannot attend across their prompt start."""
         n = len(batch)
         B = _pow2_at_least(n)
         S = _pow2_at_least(max(len(r.tokens) for r in batch))
         toks = np.full((B, S), self.pad_token, np.int32)
+        starts = np.zeros((B,), np.int32)
         for i, r in enumerate(batch):
             toks[i, S - len(r.tokens):] = r.tokens  # right-align prompts
+            starts[i] = S - len(r.tokens)
         for i in range(n, B):
             toks[i] = toks[n - 1]
-        return toks, n
+            starts[i] = starts[n - 1]
+        return toks, starts, n

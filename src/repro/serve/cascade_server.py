@@ -188,9 +188,43 @@ class CascadeTier:
 
 
 class CascadeServer:
-    def __init__(self, tiers: Sequence[CascadeTier], *, pad_to: int = 8):
+    def __init__(
+        self,
+        tiers: Sequence[CascadeTier],
+        *,
+        pad_to: int = 8,
+        placement=None,
+    ):
+        """``placement`` (serve/placement.py TierPlacement, optional) pins
+        each tier to a host and makes every cross-host deferral an explicit
+        metered ``Transport`` hop; tier values are device_put onto their
+        host's pod submesh when it has one.  Without a placement, routing
+        behaves as a single-host loopback (no metering)."""
         self.tiers = list(tiers)
         self.pad_to = pad_to
+        self.placement = placement
+        if placement is not None:
+            from repro.serve.placement import place_tier_values
+
+            assert placement.n_tiers == len(self.tiers), (
+                placement.n_tiers, len(self.tiers),
+            )
+            # replace, don't mutate: the caller's tier objects keep their
+            # original (unplaced) values
+            self.tiers = [
+                dataclasses.replace(t, values=place_tier_values(t.values, host))
+                for t, host in zip(self.tiers, placement.hosts)
+            ]
+
+    def _hop_transports(self):
+        if self.placement is None:
+            return None
+        return list(self.placement.links)
+
+    def _host_names(self):
+        if self.placement is None:
+            return None
+        return [h.name for h in self.placement.hosts]
 
     # -- classification serving -------------------------------------------
     def classify(self, tokens: np.ndarray) -> CascadeResult:
@@ -206,7 +240,10 @@ class CascadeServer:
 
         fns = [tier_fn(t) for t in self.tiers]
         specs = [t.spec for t in self.tiers]
-        return cascade_apply_routed(fns, specs, {"tokens": tokens}, pad_to=self.pad_to)
+        return cascade_apply_routed(
+            fns, specs, {"tokens": tokens}, pad_to=self.pad_to,
+            transport=self._hop_transports(), hosts=self._host_names(),
+        )
 
     # -- black-box generation serving --------------------------------------
     def generate(
@@ -218,7 +255,10 @@ class CascadeServer:
 
         def tier_fn(tier: CascadeTier):
             def fn(batch):
-                toks = np.asarray(batch["tokens"])
+                # the host-side python generate loop needs the prompt rows;
+                # this is the tier's own compute, not the defer path —
+                # fetched explicitly (transfer-guard clean)
+                toks = np.asarray(jax.device_get(batch["tokens"]))
                 out = tier.generate(toks, max_new_tokens, seed=seed)
                 return jnp.asarray(digest_generations(out))  # (E, B) ids
 
@@ -226,7 +266,10 @@ class CascadeServer:
 
         fns = [tier_fn(t) for t in self.tiers]
         specs = [dataclasses.replace(t.spec, rule="vote_preds") for t in self.tiers]
-        return cascade_apply_routed(fns, specs, {"tokens": tokens}, pad_to=self.pad_to)
+        return cascade_apply_routed(
+            fns, specs, {"tokens": tokens}, pad_to=self.pad_to,
+            transport=self._hop_transports(), hosts=self._host_names(),
+        )
 
     # -- cascade-aware continuous batching ---------------------------------
     def serve_continuous(
@@ -280,6 +323,20 @@ class CascadeServer:
                     )
                     defer = bool(np.asarray(out.defer)[0]) and i < n_tiers - 1
                     if defer:
+                        link = (
+                            self.placement.link(i)
+                            if self.placement is not None else None
+                        )
+                        if link is not None:
+                            # cross-host re-queue: the prompt is the payload
+                            # that actually crosses the boundary
+                            hosts = self._host_names()
+                            delivered = link.send(
+                                hosts[i], hosts[i + 1],
+                                {"tokens": np.asarray(r.tokens, np.int32)},
+                                n_examples=1,
+                            )
+                            r.tokens = np.asarray(delivered["tokens"], np.int32)
                         streams[i + 1].submit([r])
                     else:
                         winner = int(

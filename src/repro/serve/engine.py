@@ -1,9 +1,13 @@
 """Single-model serving engine: persistent jitted prefill + decode programs.
 
 Prompts in a batch are padded to a common length (left-aligned padding is
-prepended so the *ends* of all prompts coincide — the causal mask then makes
-pad tokens only able to pollute other pads' cache rows, not real tokens'
-futures; per-request attention masks are a noted production extension).
+prepended so the *ends* of all prompts coincide).  Per-request attention
+masks carve the padding out entirely: ``pad_batch_with_starts`` records each
+row's prompt start, and attention-family prefill/decode mask columns before
+it while running RoPE relative to it — so padded-batch logits and
+generations match the solo (unpadded) runs exactly, not just approximately.
+Recurrent families sweep the whole sequence and keep the old
+pads-pollute-only-pads contract.
 
 Compile-once discipline: every jitted program lives in a module-level cache
 keyed by the (hashable, frozen) ``ModelConfig`` — constructing a new
@@ -160,9 +164,24 @@ class ServingEngine:
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "batches": 0}
 
     # -- low-level --------------------------------------------------------
-    def classify(self, tokens: np.ndarray) -> np.ndarray:
-        """Last-token logits as a classifier head: tokens (B, S) -> (B, V)."""
-        logits, _ = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
+    def _supports_starts(self) -> bool:
+        return self.cfg.family in ("dense", "moe", "vlm")
+
+    def _prefill_batch(self, tokens, starts):
+        batch = {"tokens": jnp.asarray(tokens)}
+        if starts is not None:
+            assert self._supports_starts(), (
+                f"left-pad carve-out unsupported for family {self.cfg.family}"
+            )
+            batch["starts"] = jnp.asarray(starts, jnp.int32)
+        return batch
+
+    def classify(self, tokens: np.ndarray, starts=None) -> np.ndarray:
+        """Last-token logits as a classifier head: tokens (B, S) -> (B, V).
+        ``starts`` (B,), optional: per-row prompt starts for left-padded
+        batches (rows never attend across their own prompt start, RoPE runs
+        relative to it — padded logits match solo logits)."""
+        logits, _ = self._prefill(self.params, self._prefill_batch(tokens, starts))
         self.stats["prefill_tokens"] += tokens.size
         return np.asarray(logits)
 
@@ -172,21 +191,25 @@ class ServingEngine:
         self._rng, k = jax.random.split(self._rng)
         return jax.random.categorical(k, logits / self.temperature).astype(jnp.int32)
 
-    def generate(self, tokens: np.ndarray, max_new_tokens: int) -> np.ndarray:
-        """Greedy/temperature generation: tokens (B, S) -> (B, max_new)."""
+    def generate(self, tokens: np.ndarray, max_new_tokens: int, starts=None) -> np.ndarray:
+        """Greedy/temperature generation: tokens (B, S) -> (B, max_new).
+        With ``starts``, the left-pad carve-out also rides every decode
+        step (pad cache rows stay masked, RoPE stays prompt-relative), so a
+        left-padded batch generates token-for-token what solo runs do."""
         B, S = tokens.shape
         total = S + max_new_tokens
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
+        logits, cache = self._prefill(self.params, self._prefill_batch(tokens, starts))
         self.stats["prefill_tokens"] += tokens.size
         cache = grow_cache(cache, total - S, self.cfg)
         out = []
         tok = self._sample(logits)[:, None]
+        dec_kw = {} if starts is None else {"starts": jnp.asarray(starts, jnp.int32)}
         for t in range(max_new_tokens):
             out.append(np.asarray(tok)[:, 0])
             if t == max_new_tokens - 1:
                 break
             logits, cache = self._decode(
-                self.params, tok, cache, jnp.int32(S + t)
+                self.params, tok, cache, jnp.int32(S + t), **dec_kw
             )
             self.stats["decode_tokens"] += B
             tok = self._sample(logits)[:, None]
@@ -255,9 +278,12 @@ class ServingEngine:
             batch = self.queue.next_batch()
             if batch is None:
                 return done
-            toks, n = self.queue.pad_batch(batch)
+            toks, starts, n = self.queue.pad_batch_with_starts(batch)
             max_new = max(r.max_new_tokens for r in batch)
-            gen = self.generate(toks, max_new)
+            gen = self.generate(
+                toks, max_new,
+                starts=starts if self._supports_starts() else None,
+            )
             self.stats["batches"] += 1
             for i, r in enumerate(batch):
                 r.output = gen[i, : r.max_new_tokens]

@@ -1,0 +1,175 @@
+"""Tier placement: which host (device set) serves each cascade tier.
+
+The paper's deployment scenarios are all PLACEMENT statements: tier 1 on
+the edge device and tier 2 in the cloud (§5.2.1), tiers on heterogeneous
+GPUs (§5.2.2), tiers behind different API endpoints (§5.2.3).  A
+``TierPlacement`` makes that a runtime object: each tier gets a ``Host``
+(name + kind + optional jax submesh carved from the 'pod' axis of the
+production mesh, DESIGN.md §3), and every tier boundary gets the
+``Transport`` its deferrals must cross — ``None`` when both tiers share a
+host (in-process hand-off, no metered traffic).
+
+With a multi-pod mesh, ``pod_placement`` slices the 'pod' axis so tier i's
+stacked ensemble weights live on pod slice i (``place_tier_values``
+device_puts them there, 'ensemble' mapping onto the slice's 'pod' axis via
+the logical rule table); deferral between tiers is then an explicit
+transport hop instead of an implicit same-device handoff.  On a single
+device the same code runs with simulated hosts — the placement, transport
+metering, and routing logic are identical, only the device sets coincide.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.serve.transport import (
+    DevicePutTransport,
+    LoopbackTransport,
+    SimulatedLinkTransport,
+    Transport,
+)
+from repro.sharding.logical import logical_to_pspec, make_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class Host:
+    """One placement target: a named device set (mesh may be None for
+    simulated hosts — the routing and metering behave identically)."""
+
+    name: str
+    kind: str = "local"  # 'local' | 'edge' | 'cloud' | 'pod'
+    mesh: Optional[Mesh] = None
+
+    def devices(self):
+        return set(self.mesh.devices.flat) if self.mesh is not None else set()
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPlacement:
+    """hosts[i] serves tier i; links[i] is the transport tier i's deferrals
+    take to tier i+1 (None = same host, in-process)."""
+
+    hosts: Tuple[Host, ...]
+    links: Tuple[Optional[Transport], ...]
+
+    def __post_init__(self):
+        assert len(self.links) == max(0, len(self.hosts) - 1), (
+            f"{len(self.hosts)} hosts need {len(self.hosts) - 1} links, "
+            f"got {len(self.links)}"
+        )
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.hosts)
+
+    def link(self, i: int) -> Optional[Transport]:
+        return self.links[i]
+
+    def transports(self) -> Tuple[Transport, ...]:
+        """Distinct transport objects, for stats aggregation."""
+        seen, out = set(), []
+        for t in self.links:
+            if t is not None and id(t) not in seen:
+                seen.add(id(t))
+                out.append(t)
+        return tuple(out)
+
+    def describe(self) -> str:
+        parts = [f"{h.name}({h.kind})" for h in self.hosts]
+        return " -> ".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+
+def single_host(n_tiers: int, *, meter: bool = True) -> TierPlacement:
+    """Every tier on one host.  With ``meter=True`` hops still go through a
+    shared LoopbackTransport so tests can assert WHAT would cross a real
+    boundary (only the compacted deferral payload) without paying one."""
+    host = Host("local0", "local")
+    link = LoopbackTransport() if meter else None
+    return TierPlacement(
+        hosts=(host,) * n_tiers, links=(link,) * max(0, n_tiers - 1)
+    )
+
+
+def edge_cloud(
+    n_edge_tiers: int = 1,
+    n_cloud_tiers: int = 1,
+    *,
+    delay="medium",
+    bandwidth: Optional[float] = None,
+) -> TierPlacement:
+    """§5.2.1: the first ``n_edge_tiers`` tiers on-device, the rest in the
+    cloud; the edge→cloud boundary is a SimulatedLinkTransport carrying the
+    paper's delay grid, intra-host hops are free."""
+    assert n_edge_tiers >= 1 and n_cloud_tiers >= 1
+    edge = Host("edge0", "edge")
+    cloud = Host("cloud0", "cloud")
+    hosts = (edge,) * n_edge_tiers + (cloud,) * n_cloud_tiers
+    uplink = SimulatedLinkTransport(delay=delay, bandwidth=bandwidth)
+    links = []
+    for i in range(len(hosts) - 1):
+        links.append(uplink if hosts[i] is not hosts[i + 1] else None)
+    return TierPlacement(hosts=hosts, links=tuple(links))
+
+
+def pod_placement(mesh: Mesh, n_tiers: int) -> TierPlacement:
+    """Carve the 'pod' axis of a ('pod', 'data', 'model') mesh into one
+    slice per tier: tier i's ensemble lives on pod slice i (disjoint device
+    sets), and every tier boundary is a metered transport hop that
+    re-places the compacted payload onto the next slice's devices."""
+    from jax.sharding import PartitionSpec
+
+    from repro.launch.mesh import pod_submeshes
+
+    subs = pod_submeshes(mesh, n_tiers)
+    hosts = tuple(
+        Host(f"pod{i}", "pod", mesh=sub) for i, sub in enumerate(subs)
+    )
+    links = tuple(
+        DevicePutTransport(NamedSharding(subs[i + 1], PartitionSpec()))
+        for i in range(n_tiers - 1)
+    )
+    return TierPlacement(hosts=hosts, links=links)
+
+
+# ---------------------------------------------------------------------------
+# weight placement
+# ---------------------------------------------------------------------------
+
+
+def place_tier_values(values, host: Host, *, kind: str = "decode"):
+    """device_put a tier's stacked ensemble values onto its host's submesh,
+    the leading 'ensemble' axis mapping onto the slice's 'pod' mesh axis
+    (logical rule table, pod=True).  No-op for simulated hosts."""
+    if host.mesh is None:
+        return values
+    rules = make_rules(kind, pod=True)
+
+    def put(leaf):
+        axes = ("ensemble",) + (None,) * (leaf.ndim - 1)
+        pspec = logical_to_pspec(axes, rules, shape=leaf.shape, mesh=host.mesh)
+        return jax.device_put(leaf, NamedSharding(host.mesh, pspec))
+
+    return jax.tree.map(put, values)
+
+
+def hosts_disjoint(placement: TierPlacement) -> bool:
+    """True when every pair of distinct hosts owns disjoint device sets
+    (the multi-host acceptance check for pod placements)."""
+    seen = []
+    for h in placement.hosts:
+        devs = h.devices()
+        if not devs:
+            continue
+        for prev_name, prev in seen:
+            if prev_name != h.name and prev & devs:
+                return False
+        seen.append((h.name, devs))
+    return True

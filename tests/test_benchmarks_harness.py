@@ -1,0 +1,63 @@
+"""benchmarks/run.py harness contract: a raising bench prints an ERROR row
+but the process exits nonzero (CI's bench-smoke job depends on this), and
+--smoke trims the timing loops without changing results plumbing."""
+import sys
+import types
+
+import pytest
+
+
+def test_run_exits_nonzero_when_a_bench_raises(monkeypatch, capsys):
+    import benchmarks.run as br
+
+    boom = types.ModuleType("benchmarks.bench_boom")
+    boom.run = lambda verbose=True: (_ for _ in ()).throw(RuntimeError("rot"))
+    ok = types.ModuleType("benchmarks.bench_ok")
+    ok.run = lambda verbose=True: "bench_ok,1.0,fine"
+    monkeypatch.setitem(sys.modules, "benchmarks.bench_boom", boom)
+    monkeypatch.setitem(sys.modules, "benchmarks.bench_ok", ok)
+    monkeypatch.setattr(br, "BENCHES", ["bench_ok", "bench_boom"])
+    monkeypatch.setattr(sys, "argv", ["run.py", "--quiet"])
+    with pytest.raises(SystemExit) as e:
+        br.main()
+    assert e.value.code == 1
+    out = capsys.readouterr().out
+    # the healthy bench still reported before the failure surfaced
+    assert "bench_ok,1.0,fine" in out
+    assert "bench_boom,nan,ERROR" in out
+
+
+def test_smoke_flag_sets_env_and_quiet(monkeypatch):
+    import os
+
+    import benchmarks.run as br
+
+    # setenv (not delenv) so pytest records the key and restores its
+    # original absence at teardown even though main() overwrites it
+    monkeypatch.setenv("REPRO_BENCH_SMOKE", "0")
+    monkeypatch.setattr(br, "BENCHES", [])
+    monkeypatch.setattr(sys, "argv", ["run.py", "--smoke"])
+    br.main()
+    assert os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+    from benchmarks.common import smoke_mode
+
+    assert smoke_mode()
+
+
+def test_import_failure_reported_not_fatal(monkeypatch, capsys):
+    """An import-time rot in one bench prints its ERROR row and the others
+    still run (and the harness still exits nonzero)."""
+    import benchmarks.run as br
+
+    ok = types.ModuleType("benchmarks.bench_ok2")
+    ok.run = lambda verbose=True: "bench_ok2,1.0,fine"
+    monkeypatch.setitem(sys.modules, "benchmarks.bench_ok2", ok)
+    monkeypatch.setattr(br, "BENCHES", ["bench_no_such_module", "bench_ok2"])
+    monkeypatch.setattr(sys, "argv", ["run.py", "--quiet"])
+    with pytest.raises(SystemExit) as e:
+        br.main()
+    assert e.value.code == 1
+    out = capsys.readouterr().out
+    assert "bench_no_such_module,nan,ERROR" in out
+    assert "bench_ok2,1.0,fine" in out
