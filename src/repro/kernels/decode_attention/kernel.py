@@ -7,10 +7,11 @@ heads of a KV head are processed together, so the logits matmul is
 (G × hd) @ (hd × block_k) — G·hd and block_k are the MXU dims (hd ∈ {64,128},
 block_k a multiple of 512).
 
-``cur_len`` is a runtime scalar (how much of the cache is valid) delivered
-via scalar prefetch (SMEM) so the mask needs no recompilation per step, and
-blocks entirely past ``cur_len`` (or before the sliding window) are skipped
-with ``pl.when`` — the sweep cost is O(cur_len), or O(window) with SWA.
+``cur_len`` and ``starts`` are runtime scalars delivered via scalar prefetch
+(SMEM) so the masks need no recompilation per step.  Blocks entirely past
+``cur_len``, before the sliding window, or wholly below a row's prompt start
+(``starts`` — the serving left-pad carve-out) are skipped with ``pl.when``
+— the sweep cost is O(cur_len - start), or O(window) with SWA.
 """
 from __future__ import annotations
 
@@ -30,6 +31,7 @@ NEG_INF = -1e30
 
 def _decode_kernel(
     len_ref,  # scalar prefetch: (B,) int32  valid cache length per sequence
+    starts_ref,  # scalar prefetch: (B,) int32  per-row prompt starts
     q_ref,  # (1, 1, G, hd)
     k_ref,  # (1, 1, block_k, hd)
     v_ref,  # (1, 1, block_k, hd)
@@ -43,9 +45,12 @@ def _decode_kernel(
     softcap: Optional[float],
     block_k: int,
     num_k_blocks: int,
+    has_starts: bool,
+    skip_pad_blocks: bool,
 ):
     ik = pl.program_id(2)
     cur_len = len_ref[pl.program_id(0)]  # per-sequence (continuous batching)
+    start_b = starts_ref[pl.program_id(0)] if has_starts else None
 
     @pl.when(ik == 0)
     def _init():
@@ -57,6 +62,10 @@ def _decode_kernel(
     relevant = k_start < cur_len
     if window is not None:
         relevant = jnp.logical_and(relevant, k_start + block_k > cur_len - window)
+    if has_starts and skip_pad_blocks:
+        # left-pad carve-out: cache blocks wholly below the row's prompt
+        # start hold only pad rows — skip them structurally
+        relevant = jnp.logical_and(relevant, k_start + block_k > start_b)
 
     @pl.when(relevant)
     def _body():
@@ -72,12 +81,18 @@ def _decode_kernel(
         mask = cols < cur_len
         if window is not None:
             mask = jnp.logical_and(mask, cols >= cur_len - window)
+        if has_starts:
+            mask = jnp.logical_and(mask, cols >= start_b)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev, l_prev = m_scr[...], l_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new)
+        if has_starts:
+            # a row whose start swallows the whole valid cache must keep
+            # l == 0 (zeros out), not exp(NEG_INF - NEG_INF) == 1 weights
+            p = jnp.where(mask, p, 0.0)
         l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -91,21 +106,54 @@ def _decode_kernel(
         o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def starts_block_counts(
+    S: int,
+    cur_len,
+    starts,
+    *,
+    window: Optional[int] = None,
+    block_k: int = 512,
+):
+    """(blocks_swept_with_skip, blocks_swept_without) summed over the
+    batch — a host-side mirror of ``_decode_kernel``'s exact ``relevant``
+    predicate; the ratio is the structural block-skip win of the left-pad
+    carve-out on a given (cur_len, starts) pattern (deterministic, unlike
+    interpret-mode wall clock).  Skipped blocks are fully masked, so skip
+    on/off is bitwise identical (tested)."""
+    import numpy as np
+
+    block_k = min(block_k, S)
+    nk = S // block_k
+    k_start = np.arange(nk)[None, :] * block_k  # (1, nk)
+    cur = np.broadcast_to(np.asarray(cur_len), np.asarray(starts).shape)
+    rel = k_start < cur[:, None]
+    if window is not None:
+        rel &= k_start + block_k > cur[:, None] - window
+    with_skip = int((rel & (k_start + block_k > np.asarray(starts)[:, None])).sum())
+    return with_skip, int(rel.sum())
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("window", "softcap", "block_k", "interpret"),
+    static_argnames=("window", "softcap", "block_k", "interpret", "skip_pad_blocks"),
 )
 def decode_attention_bkgd(
     q: jax.Array,  # (B, KVH, G, hd)
     k_cache: jax.Array,  # (B, KVH, S, hd)
     v_cache: jax.Array,
-    cur_len: jax.Array,  # scalar int32
+    cur_len: jax.Array,  # scalar or (B,) int32
+    starts: Optional[jax.Array] = None,  # (B,) int32 per-row prompt starts
     *,
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     block_k: int = 512,
     interpret: bool = False,
+    skip_pad_blocks: bool = True,
 ) -> jax.Array:
+    """``starts`` rides a second scalar-prefetch ref: None keeps the
+    starts-free program (zeros are prefetched but never read).
+    ``skip_pad_blocks=False`` keeps the per-row mask but disables the
+    below-start block skipping (bench_kernels' no-skip baseline)."""
     B, KVH, G, hd = q.shape
     S = k_cache.shape[2]
     block_k = min(block_k, S)
@@ -113,6 +161,7 @@ def decode_attention_bkgd(
     nk = S // block_k
     scale = 1.0 / math.sqrt(hd)
 
+    has_starts = starts is not None
     kern = functools.partial(
         _decode_kernel,
         scale=scale,
@@ -120,17 +169,25 @@ def decode_attention_bkgd(
         softcap=softcap,
         block_k=block_k,
         num_k_blocks=nk,
+        has_starts=has_starts,
+        skip_pad_blocks=skip_pad_blocks,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(B, KVH, nk),
-        # index_maps receive the scalar-prefetch ref as a trailing argument
+        # index_maps receive the scalar-prefetch refs as trailing arguments
         in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, lens: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik, lens: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens, starts: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, hd), lambda b, h, ik, lens, starts: (b, h, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, hd), lambda b, h, ik, lens, starts: (b, h, ik, 0)
+            ),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, 1, G, hd), lambda b, h, ik, lens, starts: (b, h, 0, 0)
+        ),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -138,6 +195,11 @@ def decode_attention_bkgd(
         ],
     )
     lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    starts_arr = (
+        jnp.broadcast_to(jnp.asarray(starts, jnp.int32), (B,))
+        if has_starts
+        else jnp.zeros((B,), jnp.int32)
+    )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
@@ -146,4 +208,4 @@ def decode_attention_bkgd(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(lens, q, k_cache, v_cache)
+    )(lens, starts_arr, q, k_cache, v_cache)

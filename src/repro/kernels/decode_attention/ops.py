@@ -82,6 +82,10 @@ def _xla_decode_bksd(q, k_cache, v_cache, cur_len, *, window, softcap, starts=No
         mask = mask & (cols[None, :] >= jnp.asarray(starts)[:, None])
     s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    if starts is not None:
+        # rows whose start swallows the whole valid cache emit zeros —
+        # matching the Pallas kernel's l == 0 path and the ref oracle
+        p = jnp.where(mask[:, None, None, :], p, 0.0)
     out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
@@ -99,11 +103,12 @@ def decode_attention_bksd(
     """Decode attention over caches stored sequence-innermost — the layout
     the Pallas kernel streams directly, so no per-step transpose of the full
     cache exists on any path (§Perf iteration 1).  ``starts`` (B,) masks
-    columns before each request's prompt start (left-padded batches); it is
-    served by the XLA path — the Pallas kernel keeps the starts-free
-    serving shapes."""
+    cache columns before each request's prompt start (left-padded batches)
+    and is served on EVERY impl: the Pallas kernel carries it via scalar
+    prefetch and skips cache blocks wholly below a row's start, so
+    left-padded continuous batching never leaves the kernel path."""
     impl = kcfg.get_impl()
-    if impl == "xla" or starts is not None:
+    if impl == "xla":
         return _xla_decode_bksd(
             q, k_cache, v_cache, cur_len, window=window, softcap=softcap,
             starts=starts,
@@ -117,6 +122,7 @@ def decode_attention_bksd(
         k_cache,
         v_cache,
         jnp.asarray(cur_len, jnp.int32),
+        None if starts is None else jnp.asarray(starts, jnp.int32),
         window=window,
         softcap=softcap,
         interpret=(impl == "pallas_interpret"),

@@ -12,10 +12,11 @@ def decode_attention_ref(
     q: jax.Array,  # (B, 1, H, hd)
     k_cache: jax.Array,  # (B, S, KVH, hd)
     v_cache: jax.Array,
-    cur_len,  # scalar: number of valid cache positions
+    cur_len,  # scalar or (B,): number of valid cache positions
     *,
     window: Optional[int] = None,
     softcap: Optional[float] = None,
+    starts: Optional[jax.Array] = None,  # (B,) per-row prompt starts
 ) -> jax.Array:
     B, _, H, hd = q.shape
     _, S, KVH, _ = k_cache.shape
@@ -31,7 +32,11 @@ def decode_attention_ref(
     mask = cols[None, :] < cur[:, None]  # (B, S); supports per-sequence lens
     if window is not None:
         mask &= cols[None, :] >= (cur - window)[:, None]
+    if starts is not None:
+        # left-pad carve-out: row b never attends a cache column < starts[b]
+        mask &= cols[None, :] >= jnp.asarray(starts)[:, None]
     s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows (pure padding)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
     return out.astype(q.dtype)

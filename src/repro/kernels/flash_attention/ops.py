@@ -73,6 +73,10 @@ def _xla_flash(
         elif causal or window is not None:
             s = jnp.where(mask[None, None, None], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
+        if starts is not None:
+            # fully-masked rows (pure left-padding) emit zeros, matching the
+            # Pallas kernel's l == 0 carve-out and the ref oracle's NaN -> 0
+            p = jnp.where(maskb[:, None, None], p, 0.0)
         o = jnp.einsum("bkgqs,bskd->bqkgd", p, v_sl.astype(jnp.float32))
         lse = jax.nn.logsumexp(s, axis=-1)  # (B, KVH, G, bq)
         return None, (o.astype(q.dtype), lse)
@@ -185,21 +189,29 @@ def flash_attention(
     """``starts`` (B,) int32, optional: per-request prompt starts for
     left-padded batches — row b attends no column < starts[b] (the serving
     engine's pad carve-out).  Inference-only (routes around the custom_vjp)
-    and handled on the XLA path; the Pallas kernel serves the starts-free
-    shapes."""
+    and served on EVERY impl: the Pallas kernel carries starts via scalar
+    prefetch and skips KV blocks wholly below a row's start, so left-padded
+    continuous batching never falls back to XLA."""
     impl = kcfg.get_impl()
     if starts is not None:
-        return _xla_flash(
-            q, k, v, causal=causal, window=window, softcap=softcap,
-            q_offset=q_offset, starts=jnp.asarray(starts, jnp.int32),
-        )
+        starts = jnp.asarray(starts, jnp.int32)
     if impl == "xla":
+        if starts is not None:
+            return _xla_flash(
+                q, k, v, causal=causal, window=window, softcap=softcap,
+                q_offset=q_offset, starts=starts,
+            )
         if q_offset == 0:
             return _flash_diff(q, k, v, causal, window, softcap)
         return _xla_flash(
             q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
         )
-    assert q_offset == 0, "pallas path assumes q starts at position 0"
+    if q_offset != 0:
+        raise ValueError(
+            f"flash_attention: q_offset={q_offset} is unsupported on the "
+            f"Pallas path (impl={impl!r}) — the kernel assumes q starts at "
+            "position 0; use impl='xla' for offset prefill"
+        )
     qt = q.transpose(0, 2, 1, 3)  # (B, H, S, hd)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
@@ -207,6 +219,7 @@ def flash_attention(
         qt,
         kt,
         vt,
+        starts,
         causal=causal,
         window=window,
         softcap=softcap,

@@ -17,6 +17,7 @@ def attention_ref(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     q_offset: int = 0,
+    starts: Optional[jax.Array] = None,  # (B,) per-row prompt starts
 ) -> jax.Array:
     B, Sq, H, hd = q.shape
     _, Sk, KVH, _ = k.shape
@@ -37,7 +38,12 @@ def attention_ref(
         mask &= cols <= rows
     if window is not None:
         mask &= (rows - cols) < window
-    s = jnp.where(mask[None, None], s, -jnp.inf)
+    if starts is not None:
+        # left-pad carve-out: row b never attends a column < starts[b]
+        maskb = mask[None] & (cols[None] >= jnp.asarray(starts)[:, None, None])
+        s = jnp.where(maskb[:, None], s, -jnp.inf)
+    else:
+        s = jnp.where(mask[None, None], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)

@@ -148,8 +148,10 @@ def backbone_fwd(
 
     ``positions``/``starts`` carry the per-request left-pad carve-out
     (serve/engine.py): attention-family layers offset RoPE per row and mask
-    columns before each row's prompt start.  Recurrent families sweep the
-    sequence unconditionally, so the carve-out cannot apply there."""
+    columns before each row's prompt start — on the Pallas kernel path as
+    much as on XLA (starts ride scalar prefetch; below-start KV blocks are
+    skipped).  Recurrent families sweep the sequence unconditionally, so
+    the carve-out cannot apply there."""
     fam = cfg.family
     window = window_override if window_override is not None else cfg.sliding_window
     B, S, D = x.shape

@@ -170,7 +170,10 @@ def attention_layer(
     ``starts`` (B,) optional per-request prompt starts: with left-padded
     batches row b's tokens are masked from attending columns < starts[b],
     and the caller is expected to pass positions offset per row so RoPE
-    matches the unpadded run (serve/engine.py's pad carve-out)."""
+    matches the unpadded run (serve/engine.py's pad carve-out).  The
+    carve-out is served on every impl — the Pallas flash kernel takes
+    ``starts`` via scalar prefetch and skips below-start KV blocks, so
+    left-padded prefill stays on the kernel path."""
     from repro.kernels.flash_attention import ops as flash_ops
 
     B, S, _ = x.shape
@@ -202,7 +205,9 @@ def attention_decode(
     transpose (§Perf iteration 1).  ``starts`` (B,) carries the left-pad
     carve-out through decode: cache columns before a request's prompt start
     stay invisible and RoPE positions are taken relative to the start, so
-    a left-padded generation step matches the solo run token-for-token.
+    a left-padded generation step matches the solo run token-for-token —
+    on every impl, since the Pallas decode kernel prefetches ``starts``
+    alongside the per-slot lengths and skips below-start cache blocks.
     Returns (out, (k_cache, v_cache))."""
     from repro.kernels.decode_attention import ops as dec_ops
 

@@ -90,6 +90,100 @@ def test_flash_attention_softcap(impl):
 
 
 # ---------------------------------------------------------------------------
+# flash attention: per-row starts (left-pad carve-out on the kernel path)
+# ---------------------------------------------------------------------------
+
+# starts patterns over (B=4, S=128): all-zero (must equal the starts-free
+# run), ragged left-padding, one fully-padded row (start == S -> zeros),
+# and the extreme one-valid-column start == S-1
+_STARTS_PATTERNS = {
+    "all_zero": [0, 0, 0, 0],
+    "ragged": [0, 37, 64, 101],
+    "full_pad_row": [0, 37, 128, 64],
+    "last_col": [127, 127, 127, 127],
+}
+_MASK_FAMILIES = {
+    "causal": dict(causal=True, window=None, softcap=None),
+    "window": dict(causal=True, window=32, softcap=None),
+    "softcap": dict(causal=True, window=None, softcap=10.0),
+}
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("pattern", sorted(_STARTS_PATTERNS))
+@pytest.mark.parametrize("maskfam", sorted(_MASK_FAMILIES))
+def test_flash_attention_starts_parity(impl, pattern, maskfam):
+    """With ``starts`` supplied the dispatcher must keep the kernel path and
+    agree with the XLA path and the ref oracle to 1e-5."""
+    kw = _MASK_FAMILIES[maskfam]
+    starts = jnp.asarray(_STARTS_PATTERNS[pattern], jnp.int32)
+    ks = jax.random.split(jax.random.PRNGKey(31), 3)
+    B, S, H, KVH, hd = 4, 128, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    ref = flash_ref.attention_ref(q, k, v, starts=starts, **kw)
+    with kcfg.use_impl(impl):
+        out = flash_ops.flash_attention(q, k, v, starts=starts, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+    if pattern == "all_zero":
+        with kcfg.use_impl(impl):
+            plain = flash_ops.flash_attention(q, k, v, **kw)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(plain), atol=1e-5, rtol=1e-5
+        )
+    if pattern == "full_pad_row":  # row 2 is pure padding -> zeros
+        np.testing.assert_array_equal(np.asarray(out)[2], 0.0)
+
+
+@pytest.mark.slow
+def test_flash_attention_starts_no_xla_fallback(monkeypatch):
+    """starts used to force impl='xla'; the kernel path must now serve it
+    without touching any XLA fallback."""
+
+    def _boom(*a, **kw):
+        raise AssertionError("starts fell back to the XLA path")
+
+    monkeypatch.setattr(flash_ops, "_xla_flash", _boom)
+    monkeypatch.setattr(flash_ops, "_flash_diff", _boom)
+    ks = jax.random.split(jax.random.PRNGKey(32), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    starts = jnp.asarray([0, 57], jnp.int32)
+    ref = flash_ref.attention_ref(q, k, v, causal=True, starts=starts)
+    with kcfg.use_impl("pallas_interpret"):
+        out = flash_ops.flash_attention(q, k, v, causal=True, starts=starts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_flash_attention_starts_multiblock_skip():
+    """Small blocks force a multi-block KV sweep so below-start blocks are
+    actually skipped; skip on/off must agree bitwise (the skipped blocks
+    were fully masked) and match the oracle."""
+    from repro.kernels.flash_attention import kernel as flash_kernel
+
+    ks = jax.random.split(jax.random.PRNGKey(33), 3)
+    B, S, H, KVH, hd = 4, 128, 2, 1, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    starts = jnp.asarray([0, 33, 96, 128], jnp.int32)
+    ref = flash_ref.attention_ref(q, k, v, causal=True, starts=starts)
+    qt, kt, vt = (a.transpose(0, 2, 1, 3) for a in (q, k, v))
+    outs = {}
+    for skip in (True, False):
+        o = flash_kernel.flash_attention_bhsd(
+            qt, kt, vt, starts, causal=True, block_q=32, block_k=32,
+            interpret=True, skip_pad_blocks=skip,
+        )
+        outs[skip] = np.asarray(o.transpose(0, 2, 1, 3))
+        np.testing.assert_allclose(outs[skip], np.asarray(ref), atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(outs[True], outs[False])
+
+
+# ---------------------------------------------------------------------------
 # decode attention
 # ---------------------------------------------------------------------------
 
@@ -116,6 +210,153 @@ def test_decode_attention(impl, B, S, H, KVH, hd, cur, window, dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
     )
+
+
+# ---------------------------------------------------------------------------
+# decode attention: per-row starts (left-pad carve-out on the kernel path)
+# ---------------------------------------------------------------------------
+
+# (cur_len per row, starts per row) over (B=4, S=256): all-zero, ragged,
+# one row whose start swallows its whole valid cache (pure padding ->
+# zeros), and the one-valid-column extreme start == S-1
+_DEC_STARTS_PATTERNS = {
+    "all_zero": ([200, 100, 256, 64], [0, 0, 0, 0]),
+    "ragged": ([200, 100, 256, 64], [0, 37, 128, 63]),
+    "full_pad_row": ([200, 100, 50, 64], [0, 37, 50, 0]),
+    "last_col": ([256, 256, 256, 256], [255, 255, 255, 255]),
+}
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("pattern", sorted(_DEC_STARTS_PATTERNS))
+@pytest.mark.parametrize("maskfam", sorted(_MASK_FAMILIES))
+def test_decode_attention_starts_parity(impl, pattern, maskfam):
+    kw = {k_: v_ for k_, v_ in _MASK_FAMILIES[maskfam].items() if k_ != "causal"}
+    cur, starts = _DEC_STARTS_PATTERNS[pattern]
+    cur = jnp.asarray(cur, jnp.int32)
+    starts = jnp.asarray(starts, jnp.int32)
+    ks = jax.random.split(jax.random.PRNGKey(41), 3)
+    B, S, H, KVH, hd = 4, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    kt, vt = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ref = dec_ref.decode_attention_ref(q, k, v, cur, starts=starts, **kw)
+    with kcfg.use_impl(impl):
+        out = dec_ops.decode_attention_bksd(q, kt, vt, cur, starts=starts, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+    if pattern == "all_zero":
+        with kcfg.use_impl(impl):
+            plain = dec_ops.decode_attention_bksd(q, kt, vt, cur, **kw)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(plain), atol=1e-5, rtol=1e-5
+        )
+    if pattern == "full_pad_row":  # row 2's start swallows its cache
+        np.testing.assert_array_equal(np.asarray(out)[2], 0.0)
+
+
+@pytest.mark.slow
+def test_decode_attention_starts_no_xla_fallback(monkeypatch):
+    def _boom(*a, **kw):
+        raise AssertionError("starts fell back to the XLA path")
+
+    monkeypatch.setattr(dec_ops, "_xla_decode_bksd", _boom)
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 64))
+    kt = jax.random.normal(ks[1], (2, 2, 256, 64))
+    vt = jax.random.normal(ks[2], (2, 2, 256, 64))
+    cur = jnp.asarray([100, 256], jnp.int32)
+    starts = jnp.asarray([0, 57], jnp.int32)
+    ref = dec_ref.decode_attention_ref(
+        q, kt.transpose(0, 2, 1, 3), vt.transpose(0, 2, 1, 3), cur, starts=starts
+    )
+    with kcfg.use_impl("pallas_interpret"):
+        out = dec_ops.decode_attention_bksd(q, kt, vt, cur, starts=starts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_decode_attention_starts_multiblock_skip():
+    """block_k=64 over S=256 -> 4 cache blocks; below-start blocks skip and
+    skip on/off agree bitwise."""
+    from repro.kernels.decode_attention import kernel as dec_kernel
+
+    ks = jax.random.split(jax.random.PRNGKey(43), 3)
+    B, S, KVH, G, hd = 4, 256, 2, 2, 64
+    q = jax.random.normal(ks[0], (B, KVH, G, hd))
+    kt = jax.random.normal(ks[1], (B, KVH, S, hd))
+    vt = jax.random.normal(ks[2], (B, KVH, S, hd))
+    cur = jnp.asarray([256, 200, 150, 256], jnp.int32)
+    starts = jnp.asarray([0, 70, 140, 255], jnp.int32)
+    ref = dec_ref.decode_attention_ref(
+        q.reshape(B, 1, KVH * G, hd),
+        kt.transpose(0, 2, 1, 3),
+        vt.transpose(0, 2, 1, 3),
+        cur,
+        starts=starts,
+    )
+    outs = {}
+    for skip in (True, False):
+        o = dec_kernel.decode_attention_bkgd(
+            q, kt, vt, cur, starts, block_k=64, interpret=True,
+            skip_pad_blocks=skip,
+        )
+        outs[skip] = np.asarray(o.reshape(B, 1, KVH * G, hd))
+        np.testing.assert_allclose(outs[skip], np.asarray(ref), atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(outs[True], outs[False])
+
+
+# ---------------------------------------------------------------------------
+# serving regression: the left-pad carve-out stays on the kernel path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_serving_leftpad_kernel_path_matches_solo():
+    """Left-padded generate AND slot-based serve_continuous, with
+    impl='pallas_interpret' forced end to end, still reproduce solo runs
+    token-for-token — serving never needs the XLA detour."""
+    from repro.configs.base import ModelConfig
+    from repro.models import api
+    from repro.models.params import unbox
+    from repro.serve.batching import Request
+    from repro.serve.engine import ServingEngine
+
+    cfg = ModelConfig(
+        name="tiny-dense-kernelpath", family="dense", n_layers=2, d_model=32,
+        d_ff=64, vocab_size=64, n_heads=2, n_kv_heads=2, remat=False,
+    )
+    values, _ = unbox(api.init_params(cfg, jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(5)
+    lens, S = [3, 7, 12, 16], 16
+    toks = np.zeros((4, S), np.int32)
+    starts = np.zeros((4,), np.int32)
+    prompts = []
+    for i, L in enumerate(lens):
+        p = rng.integers(0, 64, L).astype(np.int32)
+        prompts.append(p)
+        toks[i, S - L:] = p
+        starts[i] = S - L
+
+    with kcfg.use_impl("pallas_interpret"):
+        eng = ServingEngine(cfg, values, max_batch=4)
+        gen = eng.generate(toks, 5, starts=starts)
+        solo = ServingEngine(cfg, values)
+        for i, p in enumerate(prompts):
+            np.testing.assert_array_equal(gen[i], solo.generate(p[None], 5)[0])
+
+        reqs = [
+            Request(
+                tokens=rng.integers(0, 64, int(rng.integers(3, 10))).astype(np.int32),
+                max_new_tokens=3,
+            )
+            for _ in range(5)
+        ]
+        done = eng.serve_continuous(reqs, n_slots=3, max_seq=32)
+        assert len(done) == 5
+        for r in done:
+            ref = solo.generate(r.tokens[None], r.max_new_tokens)[0]
+            np.testing.assert_array_equal(r.output, ref)
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,35 @@
-"""Before/after table for EXPERIMENTS.md §Perf: legacy baselines
-(experiments/perf/legacy) vs the optimized final sweep (experiments/dryrun).
+"""Perf comparison, two modes.
+
+Default (no args): before/after table for EXPERIMENTS.md §Perf — legacy
+roofline baselines (experiments/perf/legacy) vs the optimized final sweep
+(experiments/dryrun).
 
     PYTHONPATH=src python tools/perf_compare.py
+
+Bench gate (``--bench``): compare a ``benchmarks.run --json`` results file
+against a committed baseline and exit nonzero on step-time regressions —
+CI's bench-smoke job runs this so the perf trajectory accumulates and a
+slow hot path cannot merge silently.
+
+    PYTHONPATH=src python tools/perf_compare.py \
+        --bench BENCH_smoke.json --baseline benchmarks/baselines/BENCH_smoke.json
+
+A row regresses when ``current > baseline * max_regression + slack_us``;
+the multiplicative factor absorbs runner-speed differences between the
+machine that seeded the baseline and the CI host, the additive slack keeps
+microsecond-scale rows out of the noise.  Rows missing from the current
+run (a bench was deleted or errored) fail too; new rows not yet in the
+baseline are reported but never fail — refresh the baseline to adopt them.
+Rows whose BASELINE derived column carries a ``gate=off`` tag (e.g. the
+interpret-mode starts sweeps, whose wall clock swings several-x on shared
+runners) must still be present and non-NaN but their timing is
+informational only.
 """
+import argparse
 import glob
 import json
 import os
+import sys
 
 CELLS = [
     ("llama4-maverick-400b-a17b", "decode_32k"),
@@ -26,7 +50,7 @@ def ratio(a, b):
     return f"{a/b:.1f}×" if b else "—"
 
 
-def main():
+def roofline_table():
     print("| cell | t_compute before → after | t_memory before → after | t_collective before → after |")
     print("|---|---|---|---|")
     for arch, shape in CELLS:
@@ -40,6 +64,63 @@ def main():
             r = f" ({bb/aa:.1f}×)" if aa and bb / max(aa, 1e-12) >= 1.05 else ""
             return f"{bb:.3g} s → {aa:.3g} s{r}"
         print(f"| {arch} × {shape} | {cell('t_compute_s')} | {cell('t_memory_s')} | {cell('t_collective_s')} |")
+
+
+def compare_bench(bench_path, baseline_path, max_regression, slack_us):
+    cur = json.load(open(bench_path))
+    base = json.load(open(baseline_path))
+    cur_rows, base_rows = cur.get("rows", {}), base.get("rows", {})
+    failures = []
+    if cur.get("failed"):
+        failures.append(f"benches errored in the current run: {cur['failed']}")
+    print(f"{'bench':46s} {'base_us':>12s} {'cur_us':>12s} {'ratio':>7s}")
+    for name in sorted(base_rows):
+        b_us = base_rows[name]["us_per_call"]
+        c = cur_rows.get(name)
+        if c is None:
+            failures.append(f"{name}: present in baseline, missing from current run")
+            print(f"{name:46s} {b_us:12.1f} {'MISSING':>12s}")
+            continue
+        c_us = c["us_per_call"]
+        if c_us != c_us:  # NaN — the bench printed an ERROR row
+            failures.append(f"{name}: current run is NaN (bench errored)")
+            print(f"{name:46s} {b_us:12.1f} {'nan':>12s}")
+            continue
+        r = c_us / b_us if b_us else float("inf")
+        if "gate=off" in base_rows[name].get("derived", ""):
+            print(f"{name:46s} {b_us:12.1f} {c_us:12.1f} {r:7.2f}  (gate=off)")
+            continue
+        flag = ""
+        if c_us > b_us * max_regression + slack_us:
+            failures.append(
+                f"{name}: {c_us:.1f}us vs baseline {b_us:.1f}us "
+                f"(x{r:.2f} > x{max_regression:g} + {slack_us:g}us slack)"
+            )
+            flag = "  << REGRESSION"
+        print(f"{name:46s} {b_us:12.1f} {c_us:12.1f} {r:7.2f}{flag}")
+    for name in sorted(set(cur_rows) - set(base_rows)):
+        print(f"{name:46s} {'(new)':>12s} {cur_rows[name]['us_per_call']:12.1f}")
+    if failures:
+        print("\nFAIL: step-time regressions vs committed baseline:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nOK: no step-time regressions vs committed baseline")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=None, metavar="JSON",
+                    help="benchmarks.run --json output to gate")
+    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_smoke.json")
+    ap.add_argument("--max-regression", type=float, default=2.5,
+                    help="fail when current > baseline * this + slack")
+    ap.add_argument("--slack-us", type=float, default=200.0)
+    args = ap.parse_args()
+    if args.bench:
+        sys.exit(compare_bench(args.bench, args.baseline, args.max_regression, args.slack_us))
+    roofline_table()
 
 
 if __name__ == "__main__":
