@@ -109,3 +109,55 @@ def time_op(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def measure_overlap(build_server, make_requests, *, delay, n_slots=4,
+                    max_seq=32):
+    """Shared serial-vs-overlapped serving harness (DESIGN.md §8), used by
+    bench_edge_cloud and bench_serving so the asserted invariants cannot
+    drift apart (examples/edge_to_cloud.py keeps a deliberately inline copy
+    as teaching code).
+
+    ``build_server(placement) -> CascadeServer``; ``make_requests() ->
+    [Request]`` must return a FRESH, identical request set per call.  Serves
+    three times over an edge→cloud link — "sim" (compile warmup, off the
+    clock), "serial" (real sleeps, every hop blocks), "async" (real sleeps,
+    hops overlap edge decode) — and ASSERTS the equivalence contract:
+    identical greedy generations + answering tiers, identical metered hop
+    lists.  Returns a dict with both makespans, the overlapped link, and
+    ``ratio`` = serial/overlapped makespan (1.0 when no hop ever crossed —
+    nothing to overlap, nothing to divide).  Wall-clock GATES (ratio > 1,
+    hop-count floors) are the caller's call: they know their deferral
+    structure and flake budget."""
+    import time as _time
+
+    from repro.serve import edge_cloud
+
+    def serve(link_kind):
+        placement = edge_cloud(delay=delay, link=link_kind)
+        server = build_server(placement)
+        t0 = _time.perf_counter()
+        done = server.serve_continuous(make_requests(), n_slots=n_slots,
+                                       max_seq=max_seq)
+        return done, _time.perf_counter() - t0, placement.link(0)
+
+    serve("sim")
+    done_ser, wall_ser, link_ser = serve("serial")
+    done_ovl, wall_ovl, link_ovl = serve("async")
+
+    key = lambda done: {tuple(r.tokens): (r.tier, tuple(r.output))
+                        for r in done}
+    assert key(done_ser) == key(done_ovl), \
+        "overlap changed generations or answering tiers"
+    hops = lambda link: [(h.src, h.dst, h.n_examples, h.payload_bytes)
+                         for h in link.hops]
+    assert hops(link_ser) == hops(link_ovl), \
+        "overlap changed the metered hop list"
+
+    return {
+        "wall_serial": wall_ser,
+        "wall_overlap": wall_ovl,
+        "link": link_ovl,
+        "ratio": (wall_ser / wall_ovl) if link_ovl.hops else 1.0,
+        "hidden": link_ovl.total_latency - link_ovl.total_wait,
+    }

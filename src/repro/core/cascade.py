@@ -296,10 +296,14 @@ def cascade_apply_routed(
         }
         tr = hop_transports[i]
         if tr is not None:
-            payload = tr.send(
+            # batch mode has no admission point to overlap with — tier i+1
+            # needs the whole payload before its first chunk — so the hop
+            # handle is drained immediately; the overlapped drain lives in
+            # CascadeServer.serve_continuous (SlotStream in-flight admission)
+            handle = tr.send_async(
                 hop_names[i], hop_names[i + 1], payload, n_examples=n_defer
             )
-            payload = {k: jnp.asarray(v) for k, v in payload.items()}
+            payload = {k: jnp.asarray(v) for k, v in handle.result().items()}
         active_idx = payload.pop("__idx")[:n_defer]
         cur = payload
         m = n_defer

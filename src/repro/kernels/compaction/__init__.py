@@ -1,0 +1,14 @@
+"""Deferral compaction kernels: defer mask → dense payload + index map,
+entirely on device.
+
+The tier-transition hot path (DESIGN.md §3 deferral data path): after a
+tier votes, the deferred rows of the batch must become a dense payload for
+the next tier WITHOUT the payload visiting the host — the host reads one
+count scalar, and only the compacted payload (plus its i32 index map)
+crosses the tier boundary's ``Transport`` hop.
+
+Modules: ``kernel`` (Pallas TPU lowering — prefix-sum scatter expressed as
+a one-hot MXU matmul), ``ops`` (dispatcher + XLA fallback + the exact
+integer gather route; the public ``compact``/``compact_tree``/
+``scatter_back`` API), ``ref`` (naive host-loop oracle for parity tests).
+"""

@@ -26,7 +26,10 @@ def pod_submeshes(mesh, n_slices: int):
     """Carve a mesh with a leading 'pod' axis into ``n_slices`` contiguous
     pod slices (DESIGN.md §3: tier placement).  Each slice keeps a 'pod'
     axis (its share of pods) so a tier's 'ensemble' logical axis still maps
-    onto it; distinct slices own disjoint device sets."""
+    onto it; distinct slices own disjoint device sets.  The slice also
+    keeps its 'data' axis, which is what the data-sharded tier hand-off
+    shards deferral payload rows over on arrival
+    (``serve.transport.ShardedDevicePutTransport``, DESIGN.md §8)."""
     from jax.sharding import Mesh
 
     assert mesh.axis_names[0] == "pod", mesh.axis_names

@@ -6,11 +6,16 @@ from repro.serve.placement import (
     Host,
     TierPlacement,
     edge_cloud,
+    hosts_disjoint,
     pod_placement,
     single_host,
 )
 from repro.serve.transport import (
+    AsyncTransport,
+    DevicePutTransport,
     LoopbackTransport,
+    SendHandle,
+    ShardedDevicePutTransport,
     SimulatedLinkTransport,
     Transport,
 )
@@ -29,7 +34,12 @@ __all__ = [
     "single_host",
     "edge_cloud",
     "pod_placement",
+    "hosts_disjoint",
     "Transport",
+    "SendHandle",
     "LoopbackTransport",
+    "DevicePutTransport",
+    "ShardedDevicePutTransport",
     "SimulatedLinkTransport",
+    "AsyncTransport",
 ]

@@ -16,6 +16,12 @@ _ids = itertools.count()
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: an (S,) int32 prompt plus a generation budget.
+    The engine fills ``output`` (the generated tokens), ``tier`` (which
+    cascade tier answered, -1 outside a cascade) and ``truncated``.  In a
+    placed cascade, ``tokens`` is the ONLY payload a deferral re-queue
+    sends across a tier boundary (serve/transport.py bytes contract)."""
+
     tokens: np.ndarray  # (S,) int32 prompt
     max_new_tokens: int = 16
     rid: int = dataclasses.field(default_factory=lambda: next(_ids))
@@ -40,12 +46,14 @@ class RequestQueue:
         self._q: deque = deque()
 
     def submit(self, req: Request):
+        """Enqueue one request (FIFO)."""
         self._q.append(req)
 
     def __len__(self):
         return len(self._q)
 
     def next_batch(self) -> Optional[List[Request]]:
+        """Pop up to ``max_batch`` requests, or None when empty."""
         if not self._q:
             return None
         batch = []

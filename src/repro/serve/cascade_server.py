@@ -151,6 +151,12 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
 
 @dataclasses.dataclass
 class CascadeTier:
+    """One cascade level at serving time: a stacked k-member ensemble
+    (``values`` with a leading 'ensemble' axis) plus its ``TierSpec``
+    deferral rule, bound to the compile-once ``tier_programs`` for its
+    (config, temperature).  Construction is cheap — programs are shared
+    module-level state, so building tiers repeatedly never re-jits."""
+
     cfg: ModelConfig
     values: dict  # stacked member params (leading ensemble axis)
     spec: TierSpec
@@ -188,6 +194,15 @@ class CascadeTier:
 
 
 class CascadeServer:
+    """The ABC serving runtime: a tier list + optional ``TierPlacement``.
+
+    Every tier boundary's traffic contract is the same in all three modes:
+    ONLY the compacted deferral payload (batch modes: deferred rows + i32
+    index map, padded to their pow2 bucket cover; continuous mode: the
+    deferred request's prompt) crosses the placement link, metered by the
+    link's ``Transport``.  See the module docstring for the three modes and
+    DESIGN.md §8 for how hops overlap with compute."""
+
     def __init__(
         self,
         tiers: Sequence[CascadeTier],
@@ -217,11 +232,13 @@ class CascadeServer:
             ]
 
     def _hop_transports(self):
+        """Per-boundary transports from the placement (None = no metering)."""
         if self.placement is None:
             return None
         return list(self.placement.links)
 
     def _host_names(self):
+        """Per-tier host names for hop metering (None = unplaced)."""
         if self.placement is None:
             return None
         return [h.name for h in self.placement.hosts]
@@ -292,7 +309,18 @@ class CascadeServer:
         completed slot votes over its member generations (Eq. 3 on stable
         digests): agreement -> the request exits with the majority answer
         and ``r.tier`` set; disagreement -> the request is re-queued
-        (prompt intact) on the next tier.  Returns completed requests."""
+        (prompt intact) on the next tier.  Returns completed requests.
+
+        Cross-host re-queues go through the placement link's ``send_async``
+        (serve/transport.py): the hop is metered at send time, the handle
+        joins the NEXT tier's in-flight queue, and the loop keeps stepping
+        every runnable stream — with an ``AsyncTransport`` link the edge
+        tier therefore keeps admitting and decoding while deferral payloads
+        are on the wire (DESIGN.md §8).  The loop blocks on a handle only
+        when NO stream has runnable work (the all-idle fallback).  Greedy
+        (temperature-0) tiers generate bitwise-identically whether the link
+        overlaps, blocks, or is absent — delivery timing only moves WHEN a
+        request is re-admitted, never what its slot computes."""
         for r in requests:
             assert len(r.tokens) + r.max_new_tokens <= max_seq, (
                 f"request {r.rid}: prompt+budget "
@@ -311,6 +339,14 @@ class CascadeServer:
         n_tiers = len(streams)
 
         while any(st.active for st in streams):
+            if not any(st.runnable for st in streams):
+                # every stream idle but payloads still on the wire: block
+                # on the oldest in-flight hop (the only legal wait — there
+                # is no compute left to hide it behind)
+                next(st for st in streams if st.inflight).poll_inflight(
+                    block=True
+                )
+                continue
             for i, st in enumerate(streams):
                 tier = st.backend.tier
                 for r, gen in st.step():
@@ -329,15 +365,26 @@ class CascadeServer:
                         )
                         if link is not None:
                             # cross-host re-queue: the prompt is the payload
-                            # that actually crosses the boundary
+                            # that actually crosses the boundary.  send_async
+                            # meters the hop NOW; the handle resolves at a
+                            # tier-(i+1) admission point, so this tier's
+                            # remaining slots keep decoding over the hop
                             hosts = self._host_names()
-                            delivered = link.send(
+                            handle = link.send_async(
                                 hosts[i], hosts[i + 1],
                                 {"tokens": np.asarray(r.tokens, np.int32)},
                                 n_examples=1,
                             )
-                            r.tokens = np.asarray(delivered["tokens"], np.int32)
-                        streams[i + 1].submit([r])
+
+                            def _land(delivered, r=r):
+                                r.tokens = np.asarray(
+                                    delivered["tokens"], np.int32
+                                )
+                                return r
+
+                            streams[i + 1].submit_inflight(handle, _land)
+                        else:
+                            streams[i + 1].submit([r])
                     else:
                         winner = int(
                             np.argmax(digests == int(np.asarray(out.pred)[0]))
@@ -350,7 +397,11 @@ class CascadeServer:
 
     # -- accounting ---------------------------------------------------------
     def expected_cost(self, result: CascadeResult) -> float:
+        """Total cost of a routed run under the tiers' per-example costs
+        (chunk padding included — that is the real serving cost)."""
         return result.cost
 
     def tier_fractions(self, result: CascadeResult) -> np.ndarray:
+        """(n_tiers,) fraction of examples ANSWERED by each tier (the
+        paper's exit-fraction breakdown, Table 5)."""
         return result.tier_counts / max(1, result.tier_counts.sum())

@@ -53,6 +53,7 @@ def trace_count(key: Optional[str] = None) -> int:
 
 
 def trace_counts() -> dict:
+    """Per-program trace counts, keyed ``"<cfg.name>/<program>"``."""
     return dict(_TRACE_COUNTS)
 
 
@@ -141,6 +142,13 @@ def grow_cache(cache, pad: int, cfg: ModelConfig, *, lead: int = 0):
 
 
 class ServingEngine:
+    """Single-model serving front end over the compile-once ``model_programs``:
+    ``classify`` (last-token logits), ``generate`` (batch decode loop),
+    ``serve_continuous`` (the E=1 ``SlotStream`` driver) and the
+    queue-driven ``serve_pending``.  Holds the params, the sampling policy
+    (temperature + rng), and per-engine token/batch counters in ``stats``;
+    all jitted programs are shared module-level state."""
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -273,6 +281,10 @@ class ServingEngine:
 
     # -- queue-driven serving --------------------------------------------
     def serve_pending(self) -> List[Request]:
+        """Drain ``self.queue`` batch-by-batch: each batch is padded to its
+        pow2 bucket (``RequestQueue.pad_batch_with_starts`` — right-aligned
+        prompts, per-row starts for the attention left-pad carve-out) and
+        generated in one call.  Returns the completed requests."""
         done = []
         while True:
             batch = self.queue.next_batch()

@@ -13,9 +13,17 @@ With a multi-pod mesh, ``pod_placement`` slices the 'pod' axis so tier i's
 stacked ensemble weights live on pod slice i (``place_tier_values``
 device_puts them there, 'ensemble' mapping onto the slice's 'pod' axis via
 the logical rule table); deferral between tiers is then an explicit
-transport hop instead of an implicit same-device handoff.  On a single
-device the same code runs with simulated hosts — the placement, transport
-metering, and routing logic are identical, only the device sets coincide.
+transport hop instead of an implicit same-device handoff — by default a
+``ShardedDevicePutTransport`` that lands the payload's example axis
+SHARDED over the destination slice's ('pod', 'data') axes rather than
+replicated (DESIGN.md §8).  On a single device the same code runs with
+simulated hosts — the placement, transport metering, and routing logic are
+identical, only the device sets coincide.
+
+``edge_cloud`` additionally picks the link physics: the simulated-clock
+link for metering-only benches, or the real-sleep ``AsyncTransport``
+(overlapped or serial) for wall-clock overlap measurement — see its
+docstring and DESIGN.md §8.
 """
 from __future__ import annotations
 
@@ -26,8 +34,10 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 
 from repro.serve.transport import (
+    AsyncTransport,
     DevicePutTransport,
     LoopbackTransport,
+    ShardedDevicePutTransport,
     SimulatedLinkTransport,
     Transport,
 )
@@ -44,6 +54,7 @@ class Host:
     mesh: Optional[Mesh] = None
 
     def devices(self):
+        """This host's device set (empty for simulated hosts)."""
         return set(self.mesh.devices.flat) if self.mesh is not None else set()
 
 
@@ -63,9 +74,12 @@ class TierPlacement:
 
     @property
     def n_tiers(self) -> int:
+        """Number of placed tiers (== len(hosts))."""
         return len(self.hosts)
 
     def link(self, i: int) -> Optional[Transport]:
+        """The transport tier i's deferrals cross to reach tier i+1
+        (None = same host, unmetered in-process hand-off)."""
         return self.links[i]
 
     def transports(self) -> Tuple[Transport, ...]:
@@ -78,6 +92,7 @@ class TierPlacement:
         return tuple(out)
 
     def describe(self) -> str:
+        """Human-readable tier chain, e.g. ``edge0(edge) -> cloud0(cloud)``."""
         parts = [f"{h.name}({h.kind})" for h in self.hosts]
         return " -> ".join(parts)
 
@@ -104,26 +119,55 @@ def edge_cloud(
     *,
     delay="medium",
     bandwidth: Optional[float] = None,
+    link: str = "sim",
 ) -> TierPlacement:
     """§5.2.1: the first ``n_edge_tiers`` tiers on-device, the rest in the
-    cloud; the edge→cloud boundary is a SimulatedLinkTransport carrying the
-    paper's delay grid, intra-host hops are free."""
+    cloud; intra-host hops are free.  ``link`` picks the edge→cloud
+    boundary's physics (all three meter identical hops, DESIGN.md §8):
+
+    ``'sim'``     SimulatedLinkTransport — latency is an accounted
+                  simulated clock, ``send`` returns immediately (the fast
+                  default for benches that only need metered traffic);
+    ``'async'``   AsyncTransport — latency is real wall-clock sleep served
+                  from a worker thread; ``serve_continuous`` overlaps edge
+                  decode with the in-flight hop;
+    ``'serial'``  AsyncTransport(overlap=False) — same real sleeps, but
+                  every send blocks: the stop-the-world baseline the
+                  measured overlap ratio compares against."""
     assert n_edge_tiers >= 1 and n_cloud_tiers >= 1
     edge = Host("edge0", "edge")
     cloud = Host("cloud0", "cloud")
     hosts = (edge,) * n_edge_tiers + (cloud,) * n_cloud_tiers
-    uplink = SimulatedLinkTransport(delay=delay, bandwidth=bandwidth)
+    if link == "sim":
+        uplink = SimulatedLinkTransport(delay=delay, bandwidth=bandwidth)
+    elif link in ("async", "serial"):
+        uplink = AsyncTransport(
+            delay=delay, bandwidth=bandwidth, overlap=(link == "async")
+        )
+    else:
+        raise ValueError(f"unknown link kind: {link!r}")
     links = []
     for i in range(len(hosts) - 1):
         links.append(uplink if hosts[i] is not hosts[i + 1] else None)
     return TierPlacement(hosts=hosts, links=tuple(links))
 
 
-def pod_placement(mesh: Mesh, n_tiers: int) -> TierPlacement:
+def pod_placement(
+    mesh: Mesh, n_tiers: int, *, shard_examples: bool = True
+) -> TierPlacement:
     """Carve the 'pod' axis of a ('pod', 'data', 'model') mesh into one
     slice per tier: tier i's ensemble lives on pod slice i (disjoint device
     sets), and every tier boundary is a metered transport hop that
-    re-places the compacted payload onto the next slice's devices."""
+    re-places the compacted payload onto the next slice's devices.
+
+    With ``shard_examples=True`` (the default, DESIGN.md §8) each hop is a
+    ``ShardedDevicePutTransport``: the payload's example axis lands sharded
+    over the destination slice's ('pod', 'data') axes, so per-device HBM
+    residency on arrival is ``1/shard_count`` of the payload instead of a
+    full replica.  ``shard_examples=False`` keeps the legacy pod-wide
+    replication (``DevicePutTransport``) — the parity baseline
+    (tests/test_placement_transport.py asserts both routes produce
+    identical cascade results and meter identical bytes)."""
     from jax.sharding import PartitionSpec
 
     from repro.launch.mesh import pod_submeshes
@@ -132,10 +176,15 @@ def pod_placement(mesh: Mesh, n_tiers: int) -> TierPlacement:
     hosts = tuple(
         Host(f"pod{i}", "pod", mesh=sub) for i, sub in enumerate(subs)
     )
-    links = tuple(
-        DevicePutTransport(NamedSharding(subs[i + 1], PartitionSpec()))
-        for i in range(n_tiers - 1)
-    )
+    if shard_examples:
+        links = tuple(
+            ShardedDevicePutTransport(subs[i + 1]) for i in range(n_tiers - 1)
+        )
+    else:
+        links = tuple(
+            DevicePutTransport(NamedSharding(subs[i + 1], PartitionSpec()))
+            for i in range(n_tiers - 1)
+        )
     return TierPlacement(hosts=hosts, links=links)
 
 

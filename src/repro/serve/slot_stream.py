@@ -29,6 +29,17 @@ sample the first output token), which keeps chunked and decode-only
 admission token-for-token identical.  Chunk shapes come from the O(log S)
 bucket set, so trace counters stay flat across requests after warmup.
 
+In-flight admission (the overlap half of DESIGN.md §8): work whose payload
+is still crossing a ``Transport`` link enters through ``submit_inflight``
+as a (``SendHandle``, finalize) pair instead of a ready ``Request``.  The
+stream's ONLY legal drain points are its admission points — the top of
+``refill()`` (polls, never blocks: decode keeps running while hops are in
+flight) and ``drain()``/the driver's all-idle fallback (blocks on the
+oldest handle only when no stream has runnable work, so waiting can never
+starve compute).  Handles resolve strictly in submission (FIFO) order,
+which keeps the admission order — and therefore the whole stream — equal
+to what a blocking transport would produce.
+
 Device work goes through a small backend protocol (duck-typed):
 
     E                        int, ensemble width
@@ -76,6 +87,10 @@ class SlotStream:
         self.chunked = bool(chunked_prefill) and backend.supports_chunked_prefill
         E = backend.E
         self.queue: deque = deque()
+        # (SendHandle, finalize) pairs whose payload is still in flight on a
+        # transport link; drained FIFO at the admission points (see module
+        # docstring — this is where compute/communication overlap happens)
+        self.inflight: deque = deque()
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_consumed = np.zeros(n_slots, np.int64)  # prompt tokens fed
         self.slot_emitted: List[List[np.ndarray]] = [[] for _ in range(n_slots)]
@@ -94,17 +109,62 @@ class SlotStream:
             # (benchmarks/bench_serving.py does).
             "admit_time": 0.0,
             "decode_time": 0.0,
+            # in-flight admissions that arrived over a transport link, and
+            # how long the stream actually BLOCKED on unresolved handles
+            # (0.0 when every hop was fully hidden behind decode work)
+            "inflight_admitted": 0,
+            "inflight_wait": 0.0,
         }
 
     # -- admission ---------------------------------------------------------
+    def _check_request(self, r: Request) -> Request:
+        """The admission invariant, shared by BOTH entry paths (direct
+        ``submit`` and in-flight ``poll_inflight`` finalizers): the prompt
+        must fit the slot, 1 <= len(tokens) < max_seq."""
+        assert len(r.tokens) >= 1, f"request {r.rid}: empty prompt"
+        assert len(r.tokens) < self.max_seq, (
+            f"request {r.rid}: prompt length {len(r.tokens)} does not fit "
+            f"max_seq={self.max_seq}"
+        )
+        return r
+
     def submit(self, requests: Sequence[Request]):
+        """Enqueue ready requests (payload already local — work arriving
+        over a transport link enters via ``submit_inflight`` instead).
+        Prompts must fit the slot: 1 <= len(tokens) < max_seq."""
         for r in requests:
-            assert len(r.tokens) >= 1, f"request {r.rid}: empty prompt"
-            assert len(r.tokens) < self.max_seq, (
-                f"request {r.rid}: prompt length {len(r.tokens)} does not fit "
-                f"max_seq={self.max_seq}"
-            )
-            self.queue.append(r)
+            self.queue.append(self._check_request(r))
+
+    def submit_inflight(self, handle, finalize):
+        """Enqueue work whose payload is still crossing a transport link.
+
+        ``handle`` is a ``serve.transport.SendHandle``; ``finalize`` maps
+        the delivered payload tree to the ``Request`` to admit (the caller
+        owns the payload→request convention — e.g. the cascade re-queue
+        rebuilds ``r.tokens`` from the delivered prompt).  The pair joins
+        ``self.inflight`` and is drained FIFO at the admission points; the
+        stream stays ``active`` (but not ``runnable``) while anything is in
+        flight, so drivers never exit with payloads on the wire."""
+        self.inflight.append((handle, finalize))
+
+    def poll_inflight(self, *, block: bool = False) -> int:
+        """Drain resolved in-flight sends (FIFO, stopping at the first
+        unresolved handle so admission order matches a blocking transport)
+        into ``self.queue``.  With ``block=True`` and nothing resolved,
+        waits on the OLDEST handle — drivers only do this when no stream
+        has runnable work left (the all-idle fallback), so blocking here
+        never hides compute the loop could be doing.  Returns the number of
+        requests that landed."""
+        landed = 0
+        while self.inflight and (
+            self.inflight[0][0].done() or (block and landed == 0)
+        ):
+            handle, finalize = self.inflight.popleft()
+            self.queue.append(self._check_request(finalize(handle.result())))
+            self.stats["inflight_wait"] += handle.wait_time
+            self.stats["inflight_admitted"] += 1
+            landed += 1
+        return landed
 
     def _admit(self, s: int):
         if not self.queue:
@@ -135,13 +195,30 @@ class SlotStream:
         self.stats["admit_time"] += time.perf_counter() - t0
 
     def refill(self):
+        """Admit queued requests into every free slot.  This is the
+        non-blocking admission point: resolved in-flight sends land first
+        (a poll — decode never waits on the link here), then free slots
+        admit from the queue."""
+        if self.inflight:
+            self.poll_inflight(block=False)
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
                 self._admit(s)
 
     @property
-    def active(self) -> bool:
+    def runnable(self) -> bool:
+        """True when the stream can make device progress RIGHT NOW: a slot
+        is occupied or a ready request is queued.  In-flight sends do not
+        count — a stream with only in-flight work has nothing to decode
+        until a handle resolves (see ``active``)."""
         return any(r is not None for r in self.slot_req) or bool(self.queue)
+
+    @property
+    def active(self) -> bool:
+        """True while the stream still owes work: runnable, or a payload is
+        in flight on a transport link (drivers must not exit on in-flight
+        work — its requests have not completed anywhere yet)."""
+        return self.runnable or bool(self.inflight)
 
     # -- stepping ----------------------------------------------------------
     def step(self) -> List[Tuple[Request, np.ndarray]]:
@@ -183,9 +260,13 @@ class SlotStream:
         return completed
 
     def drain(self) -> List[Tuple[Request, np.ndarray]]:
-        """Step until every queued request has completed."""
+        """Step until every queued and in-flight request has completed.
+        When only in-flight work remains (nothing runnable), blocks on the
+        oldest handle — the single-stream all-idle fallback."""
         done = []
         while self.active:
+            if not self.runnable:
+                self.poll_inflight(block=True)
             done.extend(self.step())
         return done
 
@@ -217,12 +298,15 @@ class EngineBackend:
         self.supports_chunked_prefill = self._chunk is not None
 
     def decode(self, tok, pos):
+        """One decode step for every slot at its own ``pos``; returns the
+        sampled next tokens (1, n_slots)."""
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tok[0]), self.cache, jnp.asarray(pos)
         )
         return np.asarray(self._sample(logits))[None]  # (1, n_slots)
 
     def prefill_chunk(self, tokens, slot, start):
+        """Write one pow2 prompt chunk into ``slot`` at offset ``start``."""
         self.cache = self._chunk(
             self.params, jnp.asarray(tokens), self.cache,
             jnp.int32(slot), jnp.int32(start),
@@ -231,6 +315,8 @@ class EngineBackend:
             self._stats["prefill_tokens"] += len(tokens)
 
     def reset_slot(self, slot):
+        """Zero the slot's constant-state leaves (no-op for pos-masked
+        families — stale KV rows are invisible past the slot's pos)."""
         if self._reset is not None:
             self.cache = self._reset(self.cache, jnp.int32(slot))
 
@@ -254,6 +340,10 @@ class TierBackend:
         )
 
     def decode(self, tok, pos):
+        """One vmapped decode step for every member x slot; returns the
+        sampled next tokens (E, n_slots).  The shared rng thread is why
+        sampled (temperature>0) voting is timing-sensitive — see
+        DESIGN.md §8 on why overlap equivalence is a greedy-only claim."""
         t, self.caches, self.rng = self.tier._decode(
             self.tier.values, jnp.asarray(tok), self.caches,
             jnp.asarray(pos), self.rng,
@@ -261,11 +351,13 @@ class TierBackend:
         return np.asarray(t)[..., 0]  # (E, n_slots)
 
     def prefill_chunk(self, tokens, slot, start):
+        """Write one pow2 prompt chunk into every member's ``slot``."""
         self.caches = self.tier._prefill_chunk(
             self.tier.values, self.caches, jnp.asarray(tokens),
             jnp.int32(slot), jnp.int32(start),
         )
 
     def reset_slot(self, slot):
+        """Zero the slot's constant-state leaves across all members."""
         if getattr(self.tier, "_reset_slot", None) is not None:
             self.caches = self.tier._reset_slot(self.caches, jnp.int32(slot))

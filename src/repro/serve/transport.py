@@ -9,7 +9,13 @@ that meters the actual payload bytes and accounts the per-hop latency, so
 the scenario benchmarks report measured traffic next to the analytic
 ``EdgeCloudCost`` numbers.
 
-Two backends:
+Payload/bytes contract (shared by every backend): callers ``send`` ONLY
+what actually crosses the boundary — the compacted deferral payload (plus
+its i32 routing index map), never the full batch — and every hop records
+``Hop(src, dst, n_examples, payload_bytes, latency)`` at send time, so the
+metered hop list is identical whether a hop is drained eagerly or lazily.
+
+Backends:
 
 ``LoopbackTransport``       in-process hand-off (same host / ICI).  Zero
                             latency, but still meters bytes — tests assert
@@ -24,12 +30,39 @@ Two backends:
                             simulated clock accumulates instead of
                             sleeping so benches stay fast.
 
-Latency here is SIMULATED time in seconds (the EDGE_DELAYS units from
-``core.cost_model``), not wall time.
+``DevicePutTransport``      pod→pod re-placement inside one jax process:
+                            the payload is device_put onto the destination
+                            slice (replicated — the parity baseline for
+                            the sharded hand-off below).
+
+``ShardedDevicePutTransport``  pod→pod re-placement that SHARDS the
+                            payload's example axis over the destination
+                            slice's ('pod', 'data') mesh axes via the
+                            logical rule table, instead of replicating
+                            rows across the whole slice (DESIGN.md §8).
+
+``AsyncTransport``          the same link physics as the simulated link,
+                            but latency is REAL wall-clock sleep served
+                            from a worker thread: ``send_async`` returns a
+                            ``SendHandle`` immediately and the payload
+                            "arrives" (the handle resolves) ``latency``
+                            seconds later, so a serving loop keeps
+                            decoding while the hop is in flight
+                            (DESIGN.md §8 overlap contract).
+
+Every backend also exposes the future-based hop API: ``send_async``
+returns a ``SendHandle``; for synchronous backends the handle is already
+resolved (the hop completed inside ``send_async``), so one call-site
+serves both.  Latency units: ``SimulatedLinkTransport`` accounts SIMULATED
+seconds (the EDGE_DELAYS units from ``core.cost_model``); ``AsyncTransport``
+accounts the same number as real wall-clock seconds.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import List, Optional
 
 import jax
@@ -46,18 +79,80 @@ def tree_bytes(tree) -> int:
 
 @dataclasses.dataclass
 class Hop:
+    """One metered boundary crossing: ``n_examples`` real (unpadded)
+    deferred examples, ``payload_bytes`` as sent (bucket padding included —
+    that is what crosses the wire), ``latency`` in the backend's seconds
+    (simulated or wall-clock, see module docstring)."""
+
     src: str
     dst: str
     n_examples: int
     payload_bytes: int
-    latency: float  # simulated seconds
+    latency: float
+
+
+class SendHandle:
+    """The future side of a hop: ``send_async`` returns one immediately;
+    ``result()`` blocks until the payload has crossed the link and returns
+    the delivered tree (memoized — repeated calls are free).  ``done()``
+    never blocks, so admission points can poll.
+
+    ``wait_time`` records how long ``result()`` actually blocked: the part
+    of the hop's latency the caller FAILED to hide behind other work.  The
+    transport aggregates it (``Transport.total_wait``), which is how the
+    benches measure the overlap win without instrumenting the serving loop.
+    """
+
+    def __init__(self, transport: "Transport", future: Optional[Future] = None,
+                 value=None, finalize=None):
+        self._transport = transport
+        self._future = future
+        self._value = value
+        self._finalize = finalize  # runs on the DRAINING thread, once
+        self._resolved = future is None
+        self.wait_time = 0.0
+
+    @classmethod
+    def resolved(cls, transport: "Transport", value) -> "SendHandle":
+        """A handle whose hop already completed (synchronous backends)."""
+        return cls(transport, value=value)
+
+    def done(self) -> bool:
+        """True once the payload has crossed the link (never blocks)."""
+        return self._resolved or self._future.done()
+
+    def result(self):
+        """The delivered payload tree; blocks until the hop completes and
+        charges the blocked time to ``wait_time``/``Transport.total_wait``."""
+        if not self._resolved:
+            t0 = time.perf_counter()
+            self._value = self._future.result()
+            self.wait_time = time.perf_counter() - t0
+            self._transport._waited(self.wait_time)
+            self._resolved = True
+            self._future = None
+            if self._finalize is not None:
+                # arrival-side work (re-feeding the payload to the device)
+                # happens on the draining thread — workers only sleep the
+                # link, so jax device interaction stays single-threaded
+                self._value = self._finalize(self._value)
+                self._finalize = None
+        return self._value
 
 
 class Transport:
-    """Base transport: metering + stats; subclasses set the link physics."""
+    """Base transport: metering + stats; subclasses set the link physics.
+
+    Subclass hooks: ``_latency(payload_bytes)`` (seconds the hop accounts)
+    and ``_deliver(tree)`` (what crossing the boundary does to the payload).
+    The base ``send``/``send_async`` are synchronous — ``send_async`` exists
+    on every backend so call-sites are written once against the handle API;
+    only ``AsyncTransport`` actually defers delivery."""
 
     def __init__(self):
         self.hops: List[Hop] = []
+        self.total_wait = 0.0  # seconds callers blocked in SendHandle.result
+        self._wait_lock = threading.Lock()
 
     # -- link physics (overridden) ----------------------------------------
     def _latency(self, payload_bytes: int) -> float:
@@ -66,43 +161,73 @@ class Transport:
     def _deliver(self, tree):
         return tree
 
+    def _waited(self, seconds: float):
+        with self._wait_lock:
+            self.total_wait += seconds
+
     # -- public API ---------------------------------------------------------
     def send(self, src: str, dst: str, tree, *, n_examples: Optional[int] = None):
         """Move a payload pytree across the link; returns the delivered tree.
         Metering happens here — callers send ONLY what actually crosses the
         boundary (the compacted deferral payload, not the full batch)."""
+        return self.send_async(src, dst, tree, n_examples=n_examples).result()
+
+    def send_async(
+        self, src: str, dst: str, tree, *, n_examples: Optional[int] = None
+    ) -> SendHandle:
+        """Start a hop and return its ``SendHandle``.  The hop is metered
+        HERE (at send time), so the hop list — order, bytes, examples,
+        latency — is identical whether the handle is drained eagerly or
+        lazily.  Base implementation delivers synchronously and returns a
+        resolved handle; ``AsyncTransport`` overrides delivery only."""
+        self._meter(src, dst, tree, n_examples)
+        return SendHandle.resolved(self, self._deliver(tree))
+
+    def _meter(self, src, dst, tree, n_examples) -> Hop:
         b = tree_bytes(tree)
         n = int(n_examples) if n_examples is not None else 0
-        self.hops.append(Hop(src, dst, n, b, self._latency(b)))
-        return self._deliver(tree)
+        hop = Hop(src, dst, n, b, self._latency(b))
+        self.hops.append(hop)
+        return hop
 
     def reset(self):
+        """Drop all metered hops (and the blocked-wait accumulator)."""
         self.hops = []
+        self.total_wait = 0.0
 
     # -- stats ---------------------------------------------------------------
     @property
     def total_bytes(self) -> int:
+        """Sum of payload bytes over every metered hop."""
         return sum(h.payload_bytes for h in self.hops)
 
     @property
     def total_latency(self) -> float:
+        """Sum of per-hop link seconds — the SERIAL link time: what the
+        hops cost a stop-the-world serving loop that blocks on every send.
+        An overlapped loop pays only ``total_wait`` of it on the wall."""
         return sum(h.latency for h in self.hops)
 
     @property
     def total_examples(self) -> int:
+        """Sum of real (unpadded) deferred examples over every hop."""
         return sum(h.n_examples for h in self.hops)
 
     def stats(self) -> dict:
+        """Aggregate hop metering as a plain dict (benches' report row)."""
         return {
             "hops": len(self.hops),
             "bytes": self.total_bytes,
             "examples": self.total_examples,
             "latency": self.total_latency,
+            "wait": self.total_wait,
         }
 
 
 class LoopbackTransport(Transport):
-    """Same-host hand-off: no delay, payload stays on device."""
+    """Same-host hand-off: no delay, payload stays on device.  Exists so
+    single-host placements still meter WHAT would cross a real boundary
+    (only the compacted deferral payload) without paying one."""
 
 
 class DevicePutTransport(Transport):
@@ -110,7 +235,13 @@ class DevicePutTransport(Transport):
     payload is re-placed onto the destination host's devices so the next
     tier's jitted programs see their own committed device set.  Bytes are
     metered like any hop; latency stays zero (ICI is not the §5.2.1
-    bottleneck being modeled)."""
+    bottleneck being modeled).
+
+    ``dst_sharding`` is applied to EVERY leaf as-is — with the default
+    ``PartitionSpec()`` that replicates each payload row on every device of
+    the destination slice.  This is the parity baseline;
+    ``ShardedDevicePutTransport`` is the production hand-off (payload rows
+    sharded over the slice, DESIGN.md §8)."""
 
     def __init__(self, dst_sharding):
         super().__init__()
@@ -122,12 +253,75 @@ class DevicePutTransport(Transport):
         )
 
 
+class ShardedDevicePutTransport(Transport):
+    """Data-sharded pod→pod hand-off (DESIGN.md §8): the compacted payload's
+    leading EXAMPLE axis is device_put sharded over the destination slice's
+    ('pod', 'data') mesh axes through the logical rule table ('act_batch'
+    row, ``sharding.logical``), instead of replicating every row across the
+    whole slice.  Trailing axes stay replicated (deferral payloads are
+    per-example rows, not weight matrices).
+
+    Bytes metered are the bytes SENT (one copy of the payload) — the same
+    number the replicated transport meters, because what crosses the
+    boundary is the payload, not its destination residency; what changes is
+    per-device HBM residency on arrival: ``1/shard_count`` of the payload
+    per device instead of all of it.  ``logical_to_pspec`` drops any mesh
+    axis that does not divide the concrete example count, so odd-sized
+    payloads degrade to replication rather than failing."""
+
+    def __init__(self, dst_mesh, *, kind: str = "decode"):
+        super().__init__()
+        from repro.sharding.logical import make_rules
+
+        self.dst_mesh = dst_mesh
+        self.rules = make_rules(kind, pod=True)
+
+    def example_sharding(self, leaf) -> "jax.sharding.NamedSharding":
+        """The destination sharding for one (B, ...) payload leaf: leading
+        axis 'act_batch' -> the slice's ('pod', 'data'), rest replicated."""
+        from jax.sharding import NamedSharding
+
+        from repro.sharding.logical import logical_to_pspec
+
+        axes = ("act_batch",) + (None,) * (leaf.ndim - 1)
+        pspec = logical_to_pspec(
+            axes, self.rules, shape=leaf.shape, mesh=self.dst_mesh
+        )
+        return NamedSharding(self.dst_mesh, pspec)
+
+    def shard_counts(self, tree) -> List[int]:
+        """Per-leaf number of distinct example-axis shards the delivered
+        payload lands in (1 = that leaf degraded to replication)."""
+        import numpy as np
+
+        counts = []
+        for leaf in jax.tree.leaves(tree):
+            spec = self.example_sharding(leaf).spec
+            axes = spec[0] if len(spec) else None
+            if axes is None:
+                counts.append(1)
+            else:
+                names = (axes,) if isinstance(axes, str) else tuple(axes)
+                sizes = dict(zip(self.dst_mesh.axis_names,
+                                 self.dst_mesh.devices.shape))
+                counts.append(int(np.prod([sizes[a] for a in names])))
+        return counts
+
+    def _deliver(self, tree):
+        return jax.tree.map(
+            lambda l: jax.device_put(l, self.example_sharding(l)), tree
+        )
+
+
 class SimulatedLinkTransport(Transport):
     """A constrained link (edge→cloud): per-hop latency = delay + bytes/bw.
 
     ``delay`` may be a float (seconds) or a key into the paper's
     ``EDGE_DELAYS`` grid; ``bandwidth`` is bytes/second (None = latency is
-    delay-dominated, the §5.2.1 model)."""
+    delay-dominated, the §5.2.1 model).  The accounted latency is a
+    SIMULATED clock — ``send`` returns immediately and benches sweep the
+    delay grid over the metered hops; ``AsyncTransport`` is the wall-clock
+    twin whose hops genuinely take that long to resolve."""
 
     def __init__(self, delay="medium", bandwidth: Optional[float] = None):
         super().__init__()
@@ -146,3 +340,93 @@ class SimulatedLinkTransport(Transport):
         # clean; this is the one place deferral payload crosses the host)
         host = jax.device_get(tree)
         return jax.tree.map(jax.numpy.asarray, host)
+
+
+class AsyncTransport(SimulatedLinkTransport):
+    """Overlapped edge→cloud link: same physics as the simulated link, but
+    latency is REAL.  ``send_async`` meters the hop, snapshots the payload
+    off the source device (device_get — the bytes leave NOW, so the sender
+    is free to keep mutating its batch), and returns a ``SendHandle`` that
+    resolves after a worker thread has slept the hop's ``latency`` — the
+    wall-clock behaviour of an in-flight RPC.  The caller (the
+    ``SlotStream`` admission points, DESIGN.md §8) keeps decoding while the
+    hop is in flight and drains the handle when the payload is needed.
+
+    ``overlap=False`` degrades ``send_async`` to the blocking base
+    behaviour (sleep inline, return a resolved handle): the stop-the-world
+    serial baseline the benches compare against.  Both modes meter
+    IDENTICAL hops (same order, bytes, examples, latency — metering happens
+    at send time) and deliver identical payloads, which is what makes the
+    measured overlap ratio an apples-to-apples wall-clock comparison.
+
+    Concurrent in-flight hops each pay their full latency independently
+    (the §5.2.1 delay-dominated model: propagation delay, not contended
+    bandwidth, dominates the grid).  Determinism: delivery only affects
+    WHEN a deferred example is re-admitted, never its tokens — greedy
+    (temperature-0) cascades generate bitwise-identically under either
+    mode (tests/test_async_transport.py).
+
+    Worker threads come from one lazily-created module-level pool shared by
+    every AsyncTransport (workers only sleep, so sharing costs nothing and
+    bounds the process at ``_MAX_WORKERS`` transport threads no matter how
+    many links benches/tests construct); ``shutdown_async_workers()`` tears
+    it down for callers that need a clean thread count."""
+
+    _MAX_WORKERS = 8  # in-flight hops beyond this queue behind the pool
+
+    def __init__(self, delay="medium", bandwidth: Optional[float] = None,
+                 *, overlap: bool = True):
+        super().__init__(delay=delay, bandwidth=bandwidth)
+        self.overlap = overlap
+
+    def _executor(self) -> ThreadPoolExecutor:
+        global _WORKER_POOL
+        with _POOL_LOCK:
+            if _WORKER_POOL is None:
+                _WORKER_POOL = ThreadPoolExecutor(
+                    max_workers=self._MAX_WORKERS,
+                    thread_name_prefix="async-transport",
+                )
+            return _WORKER_POOL
+
+    @staticmethod
+    def _refeed(host_tree):
+        return jax.tree.map(jax.numpy.asarray, host_tree)
+
+    @staticmethod
+    def _sleep_link(host_tree, latency: float):
+        time.sleep(latency)
+        return host_tree
+
+    def send_async(
+        self, src: str, dst: str, tree, *, n_examples: Optional[int] = None
+    ) -> SendHandle:
+        """Start a real-wall-clock hop; the handle resolves after the
+        link's latency has actually elapsed (see class docstring)."""
+        hop = self._meter(src, dst, tree, n_examples)
+        # snapshot off-device in the CALLER's thread: the payload's bytes
+        # leave the source at send time.  The worker ONLY sleeps the link;
+        # re-feeding to the device happens on the draining thread via the
+        # handle's finalize, so jax device work stays single-threaded
+        host = jax.device_get(tree)
+        if not self.overlap:
+            time.sleep(hop.latency)
+            return SendHandle.resolved(self, self._refeed(host))
+        fut = self._executor().submit(self._sleep_link, host, hop.latency)
+        return SendHandle(self, future=fut, finalize=self._refeed)
+
+
+# the shared AsyncTransport worker pool (see AsyncTransport docstring)
+_WORKER_POOL: Optional[ThreadPoolExecutor] = None
+_POOL_LOCK = threading.Lock()
+
+
+def shutdown_async_workers():
+    """Tear down the shared AsyncTransport worker pool (idempotent).  Waits
+    for in-flight hops; handles already resolved stay resolvable.  The next
+    ``send_async`` lazily recreates the pool."""
+    global _WORKER_POOL
+    with _POOL_LOCK:
+        pool, _WORKER_POOL = _WORKER_POOL, None
+    if pool is not None:
+        pool.shutdown(wait=True)

@@ -209,6 +209,8 @@ pl = pod_placement(mesh, 2)
 assert [h.name for h in pl.hosts] == ["pod0", "pod1"]
 assert hosts_disjoint(pl), "pod slices must own disjoint devices"
 assert len(pl.hosts[0].devices() & pl.hosts[1].devices()) == 0
+from repro.serve.transport import ShardedDevicePutTransport
+assert isinstance(pl.link(0), ShardedDevicePutTransport)  # sharded default
 
 SMALL = ModelConfig(name="tiny-s", family="dense", n_layers=2, d_model=64,
     d_ff=128, vocab_size=64, n_heads=4, n_kv_heads=2, remat=False)
@@ -225,10 +227,14 @@ probe = CascadeTier(SMALL, v1, TierSpec("t1", "confidence", 0.0, k=2, cost=1.0))
 logits = probe._last_logits(probe.values, {"tokens": jnp.asarray(toks)})
 theta = float(np.median(np.asarray(deferral.confidence_rule(logits, 0.0).score)))
 
-server = CascadeServer([
-    CascadeTier(SMALL, v1, TierSpec("t1", "confidence", theta, k=2, cost=1.0)),
-    CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1, cost=50.0)),
-], placement=pl)
+def serve(placement):
+    server = CascadeServer([
+        CascadeTier(SMALL, v1, TierSpec("t1", "confidence", theta, k=2, cost=1.0)),
+        CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1, cost=50.0)),
+    ], placement=placement)
+    return server, server.classify(toks)
+
+server, res = serve(pl)
 
 # tier weights actually live on their pod slice
 d0 = {d for l in jax.tree.leaves(server.tiers[0].values) for d in l.devices()}
@@ -236,13 +242,34 @@ d1 = {d for l in jax.tree.leaves(server.tiers[1].values) for d in l.devices()}
 assert d0 <= pl.hosts[0].devices(), (d0, pl.hosts[0].devices())
 assert d1 <= pl.hosts[1].devices(), (d1, pl.hosts[1].devices())
 
-res = server.classify(toks)
-assert res.tier_counts.sum() == 16
+res_counts = res.tier_counts
+assert res_counts.sum() == 16
 link = pl.link(0)
-n_def = int(res.tier_counts[1])
+n_def = int(res_counts[1])
 assert 0 < n_def < 16, n_def
 assert link.total_examples == n_def, (link.total_examples, n_def)
 assert 0 < link.total_bytes < 16 * (8 * 4 + 4)  # only the deferred slice
+
+# -- sharded hand-off parity vs the replicated baseline --------------------
+# the delivered payload's example axis must really shard over the dst
+# slice ('pod' x 'data' = 2 shards here), and results/metered traffic must
+# be identical to pod-wide replication
+h = link.send_async("pod0", "pod1",
+                    {"x": jnp.ones((8, 4), jnp.float32)}, n_examples=8)
+delivered = h.result()["x"]
+shards = {s.data.shape for s in delivered.addressable_shards}
+assert shards == {(4, 4)}, shards  # 8 rows -> 2 shards of 4, not replicas
+assert link.shard_counts({"x": jnp.ones((8, 4), jnp.float32)}) == [2]
+link.hops.pop()  # probe hop: keep the serving meters comparable below
+
+pl_rep = pod_placement(mesh, 2, shard_examples=False)
+_, res_rep = serve(pl_rep)
+np.testing.assert_array_equal(res.pred, res_rep.pred)
+np.testing.assert_array_equal(res.tier_of, res_rep.tier_of)
+link_rep = pl_rep.link(0)
+assert link_rep.total_bytes == link.total_bytes, (
+    link_rep.total_bytes, link.total_bytes)
+assert link_rep.total_examples == link.total_examples
 print("POD_PLACEMENT_OK", n_def, link.total_bytes)
 """
 

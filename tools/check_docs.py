@@ -1,0 +1,161 @@
+"""Docs gate: intra-repo links + DESIGN.md section citations + quickstart.
+
+    PYTHONPATH=src python tools/check_docs.py [--run-quickstart]
+
+Three checks (exit nonzero on any failure, every failure printed):
+
+1. **Markdown links** — every relative ``[text](path)`` link in the
+   top-level ``*.md`` files must point at a file or directory that exists
+   (anchors ``path#frag`` are checked for the file part; absolute URLs are
+   skipped).
+
+2. **DESIGN.md § citations** — DESIGN.md's section headers define the
+   citable tokens (``## §8 ...`` defines ``§8``).  Every occurrence of
+   ``DESIGN.md §<token>`` anywhere in the repo's ``.py`` and ``.md`` files
+   must name a section that exists, so docstring citations cannot rot when
+   sections are renumbered.  (Bare ``§5.2.1``-style references cite the
+   PAPER, not DESIGN.md, and are out of scope.)
+
+3. **Quickstart smoke** (``--run-quickstart``) — the commands in
+   README.md's first ```` ```bash ```` block are executed and must exit 0.
+   The full-pytest line is run ``--collect-only`` here: the docs job
+   proves the documented command line is valid, while test EXECUTION stays
+   owned by the fast-tier CI job (running the suite twice per push buys
+   nothing).  Bench lines run under ``REPRO_BENCH_SMOKE=1``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+MD_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md", "ISSUE.md",
+            "PAPER.md", "PAPERS.md"]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SECTION_RE = re.compile(r"^##\s+§(\S+)", re.M)
+# a citation token starts with a word character: prose that merely mentions
+# the "DESIGN.md §" convention (e.g. a changelog entry) is not a citation
+_CITE_RE = re.compile(r"DESIGN\.md\s+§([\w][\w.-]*)")
+
+
+def _read(path: str) -> str:
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def check_markdown_links() -> list:
+    """Relative links in top-level markdown must resolve inside the repo."""
+    failures = []
+    for name in MD_FILES:
+        path = os.path.join(REPO, name)
+        if not os.path.exists(path):
+            continue
+        for m in _LINK_RE.finditer(_read(path)):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part = target.split("#", 1)[0]
+            if not file_part:  # pure same-file anchor
+                continue
+            if not os.path.exists(os.path.join(REPO, file_part)):
+                failures.append(f"{name}: broken link -> {target}")
+    return failures
+
+
+def design_sections() -> set:
+    """The citable § tokens, from DESIGN.md's '## §<token>' headers."""
+    return set(_SECTION_RE.findall(_read(os.path.join(REPO, "DESIGN.md"))))
+
+
+def _cited_files():
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if not d.startswith(".")
+                   and d != "__pycache__"]
+        for f in files:
+            if f.endswith((".py", ".md")):
+                path = os.path.join(root, f)
+                if os.path.samefile(path, __file__):
+                    continue  # this file's docstring shows placeholder tokens
+                yield path
+
+
+def check_design_citations() -> list:
+    """Every 'DESIGN.md §X' in the repo must name an existing section."""
+    sections = design_sections()
+    if not sections:
+        return ["DESIGN.md: no '## §...' section headers found"]
+    failures = []
+    for path in _cited_files():
+        rel = os.path.relpath(path, REPO)
+        for i, line in enumerate(_read(path).splitlines(), 1):
+            for tok in _CITE_RE.findall(line):
+                tok = tok.rstrip(".,;:)")
+                if tok not in sections:
+                    failures.append(
+                        f"{rel}:{i}: cites DESIGN.md §{tok} "
+                        f"(have: {', '.join(sorted(sections))})"
+                    )
+    return failures
+
+
+def quickstart_commands() -> list:
+    """The commands of README.md's first ```bash block (comments stripped)."""
+    text = _read(os.path.join(REPO, "README.md"))
+    m = re.search(r"```bash\n(.*?)```", text, re.S)
+    if not m:
+        return []
+    cmds = []
+    for line in m.group(1).splitlines():
+        line = line.split("#", 1)[0].strip()
+        if line:
+            cmds.append(line)
+    return cmds
+
+
+def run_quickstart() -> list:
+    failures = []
+    cmds = quickstart_commands()
+    if not cmds:
+        return ["README.md: no ```bash quickstart block found"]
+    env = {**os.environ, "REPRO_BENCH_SMOKE": "1"}
+    for cmd in cmds:
+        run_cmd = cmd
+        if "pytest" in cmd:
+            # the docs job validates the documented command LINE; the
+            # fast-tier job owns actually executing the suite
+            run_cmd = f"{cmd} --collect-only >/dev/null"
+        print(f"$ {run_cmd}", flush=True)
+        r = subprocess.run(run_cmd, shell=True, cwd=REPO, env=env,
+                           timeout=1800)
+        if r.returncode != 0:
+            failures.append(f"quickstart command failed ({r.returncode}): {cmd}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run-quickstart", action="store_true",
+                    help="also execute the README quickstart commands")
+    args = ap.parse_args()
+
+    failures = check_markdown_links() + check_design_citations()
+    if args.run_quickstart:
+        failures += run_quickstart()
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} docs problem(s)")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    n = len(design_sections())
+    print(f"docs OK: links resolve, all DESIGN.md citations hit one of "
+          f"{n} sections" + (", quickstart ran" if args.run_quickstart else ""))
+
+
+if __name__ == "__main__":
+    main()
