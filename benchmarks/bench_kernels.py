@@ -27,6 +27,58 @@ from repro.kernels.mamba2_ssd import ops as ssd_ops, ref as ssd_ref
 from repro.kernels.rwkv6_wkv import ops as wkv_ops, ref as wkv_ref
 
 
+# ---------------------------------------------------------------------------
+# compile-once benchmark programs: jitted at MODULE level so repeated run()
+# invocations (perf_compare reruns, the harness smoke test) re-enter one jit
+# cache instead of re-tracing per call (abclint ABC101/ABC102)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _flash_chunk(q, k, v):
+    return flash_ops.flash_attention(q, k, v, causal=True)
+
+
+@jax.jit
+def _flash_oracle(q, k, v):
+    return flash_ref.attention_ref(q, k, v, causal=True)
+
+
+@functools.partial(jax.jit, static_argnames=("length",))
+def _decode_sweep(q, k, v, *, length):
+    return dec_ops.decode_attention(q, k, v, length)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _ssd_chunk(x, dt, A, B, C, *, chunk):
+    return ssd_ops.ssd(x, dt, A, B, C, chunk=chunk)
+
+
+@jax.jit
+def _ssd_oracle(x, dt, A, B, C):
+    return ssd_ref.ssd_ref(x, dt, A, B, C)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _wkv_chunk(r, k, v, w, u, *, chunk):
+    return wkv_ops.wkv6(r, k, v, w, u, chunk=chunk)
+
+
+@jax.jit
+def _wkv_oracle(r, k, v, w, u):
+    return wkv_ref.wkv6_ref(r, k, v, w, u)
+
+
+@jax.jit
+def _agreement_vote_frac(logits):
+    return agree_ops.agreement(logits)["vote_frac"]
+
+
+@jax.jit
+def _agreement_vote_frac_oracle(logits):
+    return agree_ref.agreement_ref(logits)["vote_frac"]
+
+
 def run(verbose=True):
     rows = []
     ks = jax.random.split(jax.random.PRNGKey(0), 8)
@@ -36,9 +88,8 @@ def run(verbose=True):
     q = jax.random.normal(ks[0], (B, S, H, hd), jnp.bfloat16)
     k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.bfloat16)
     v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.bfloat16)
-    f_chunk = jax.jit(lambda q, k, v: flash_ops.flash_attention(q, k, v, causal=True))
-    f_ref = jax.jit(lambda q, k, v: flash_ref.attention_ref(q, k, v, causal=True))
-    us_c, us_r = time_op(f_chunk, q, k, v, repeats=5), time_op(f_ref, q, k, v, repeats=5)
+    us_c = time_op(_flash_chunk, q, k, v, repeats=5)
+    us_r = time_op(_flash_oracle, q, k, v, repeats=5)
     rows.append(csv_row("kernel_flash_attention_1k", us_c, f"ref_us={us_r:.0f};speedup={us_r/us_c:.2f}x"))
 
     # decode attention over a 16k cache
@@ -46,8 +97,7 @@ def run(verbose=True):
     kc = jax.random.normal(ks[3], (4, S2, KVH, hd), jnp.bfloat16)
     vc = jax.random.normal(ks[4], (4, S2, KVH, hd), jnp.bfloat16)
     qd = jax.random.normal(ks[5], (4, 1, H, hd), jnp.bfloat16)
-    d_ops = jax.jit(lambda q, k, v: dec_ops.decode_attention(q, k, v, S2))
-    us_d = time_op(d_ops, qd, kc, vc, repeats=5)
+    us_d = time_op(functools.partial(_decode_sweep, length=S2), qd, kc, vc, repeats=5)
     rows.append(csv_row("kernel_decode_attention_16k", us_d, f"bytes_swept={kc.nbytes*2}"))
 
     # mamba2 ssd: chunked vs step-scan oracle
@@ -57,9 +107,8 @@ def run(verbose=True):
     A = -jnp.exp(jax.random.normal(ks[0], (Hm,)) * 0.3)
     Bmat = jax.random.normal(ks[1], (Bm, Sm, G, N)) * 0.5
     Cmat = jax.random.normal(ks[2], (Bm, Sm, G, N)) * 0.5
-    s_chunk = jax.jit(lambda *a: ssd_ops.ssd(*a, chunk=128))
-    s_ref = jax.jit(lambda *a: ssd_ref.ssd_ref(*a))
-    us_sc, us_sr = time_op(s_chunk, x, dt, A, Bmat, Cmat, repeats=5), time_op(s_ref, x, dt, A, Bmat, Cmat, repeats=5)
+    us_sc = time_op(functools.partial(_ssd_chunk, chunk=128), x, dt, A, Bmat, Cmat, repeats=5)
+    us_sr = time_op(_ssd_oracle, x, dt, A, Bmat, Cmat, repeats=5)
     rows.append(csv_row("kernel_mamba2_ssd_512", us_sc, f"stepscan_us={us_sr:.0f};speedup={us_sr/us_sc:.2f}x"))
 
     # rwkv6 wkv: chunked vs step-scan oracle
@@ -68,9 +117,8 @@ def run(verbose=True):
     vv = jax.random.normal(ks[5], (2, 512, 4, 64))
     lw = -jnp.exp(jax.random.normal(ks[6], (2, 512, 4, 64)) * 0.5)
     u = jax.random.normal(ks[7], (4, 64)) * 0.5
-    w_chunk = jax.jit(lambda *a: wkv_ops.wkv6(*a, chunk=32))
-    w_ref = jax.jit(lambda *a: wkv_ref.wkv6_ref(*a))
-    us_wc, us_wr = time_op(w_chunk, r, kk, vv, lw, u, repeats=5), time_op(w_ref, r, kk, vv, lw, u, repeats=5)
+    us_wc = time_op(functools.partial(_wkv_chunk, chunk=32), r, kk, vv, lw, u, repeats=5)
+    us_wr = time_op(_wkv_oracle, r, kk, vv, lw, u, repeats=5)
     rows.append(csv_row("kernel_rwkv6_wkv_512", us_wc, f"stepscan_us={us_wr:.0f};speedup={us_wr/us_wc:.2f}x"))
 
     # starts-aware flash prefill: block-skip speedup on ragged left-padding.
@@ -121,9 +169,8 @@ def run(verbose=True):
 
     # agreement reduce over a 32k vocab
     logits = jax.random.normal(ks[0], (3, 64, 32768))
-    a_ops = jax.jit(lambda l: agree_ops.agreement(l)["vote_frac"])
-    a_ref = jax.jit(lambda l: agree_ref.agreement_ref(l)["vote_frac"])
-    us_a, us_ar = time_op(a_ops, logits, repeats=5), time_op(a_ref, logits, repeats=5)
+    us_a = time_op(_agreement_vote_frac, logits, repeats=5)
+    us_ar = time_op(_agreement_vote_frac_oracle, logits, repeats=5)
     rows.append(csv_row("kernel_agreement_32kvocab", us_a, f"ref_us={us_ar:.0f}"))
 
     if verbose:

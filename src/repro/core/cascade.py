@@ -174,6 +174,18 @@ def _fetch(tree):
     return jax.device_get(tree)
 
 
+def host_fetch(tree):
+    """The public metered explicit fetch (numpy leaves out, bytes counted).
+
+    Every INTENTIONAL device→host read on a serving path goes through here
+    (or the module-private ``_fetch``): the serving engines' sampled-token
+    reads, the cascade's vote scalars, the per-tier deferred counts.  This
+    is what keeps the transfer-guard regressions meaningful — implicit
+    transfers raise, and the byte meter sees everything that did cross.
+    abclint pass 2 (ABC2xx) enforces the discipline statically."""
+    return _fetch(tree)
+
+
 def _colocate(x, ref):
     """Re-place ``x`` next to ``ref`` (device→device, never via host) so
     result accumulators can merge per-tier answers produced on other hosts'
@@ -315,9 +327,10 @@ def cascade_apply_routed(
         (pred, tier_of, scores, tier_counts_dev)
     )
     return CascadeResult(
-        pred=np.asarray(pred_h),
-        tier_of=np.asarray(tier_h),
-        scores=np.asarray(scores_h),
+        pred=pred_h,
+        tier_of=tier_h,
+        scores=scores_h,
+        # abclint: disable=ABC203(counts_h is a host list of fetched per-tier scalars)
         tier_counts=np.asarray(counts_h, np.int64),
         evaluated=evaluated,
         cost=cost,

@@ -42,6 +42,16 @@ def logits_features(logits: jax.Array) -> jax.Array:
     return jnp.stack([top2[:, 0], top2[:, 0] - top2[:, 1], ent, lse], axis=-1)
 
 
+def _router_loss(params, Xn, y):
+    w, b = params
+    z = Xn @ w + b
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+# module-level jit: every train_router call re-enters one program cache
+_router_grad = jax.jit(jax.grad(_router_loss))
+
+
 def train_router(
     feats: np.ndarray,  # (N, F)
     correct: np.ndarray,  # (N,) bool — was the tier's answer right?
@@ -56,16 +66,9 @@ def train_router(
     Xn = (X - mu) / sd
     w = jax.random.normal(jax.random.PRNGKey(seed), (X.shape[1],)) * 0.01
     b = jnp.zeros(())
-
-    def loss(params):
-        w, b = params
-        z = Xn @ w + b
-        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
-
-    g = jax.jit(jax.grad(loss))
     params = (w, b)
     for _ in range(steps):
-        gw, gb = g(params)
+        gw, gb = _router_grad(params, Xn, y)
         params = (params[0] - lr * gw, params[1] - lr * gb)
     return LearnedRouter(w=params[0], b=params[1], mu=mu, sd=sd)
 

@@ -75,7 +75,11 @@ def member_stats_pallas(
     E, B, V = logits.shape
     block_b = min(block_b, B)
     block_v = min(block_v, V)
-    assert B % block_b == 0 and V % block_v == 0
+    if B % block_b != 0 or V % block_v != 0:
+        raise ValueError(
+            f"agreement kernel BlockSpec tiling: B={B}/V={V} must divide "
+            f"block_b={block_b}/block_v={block_v} (logits {logits.shape})"
+        )
     nb, nv = B // block_b, V // block_v
     kern = functools.partial(_agree_kernel, block_v=block_v, num_v_blocks=nv)
     m, idx, l = pl.pallas_call(

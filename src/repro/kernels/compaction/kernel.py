@@ -65,7 +65,11 @@ def compact_pallas(
     D lane-friendly — ops.py pads both before calling."""
     B, D = x.shape
     block_d = min(block_d, D)
-    assert D % block_d == 0, (D, block_d)
+    if D % block_d != 0:
+        raise ValueError(
+            f"compaction kernel BlockSpec tiling: D={D} is not divisible "
+            f"by block_d={block_d} (payload {x.shape})"
+        )
     nd = D // block_d
     m_row = mask.astype(jnp.int32).reshape(1, B)
     out, im, cnt = pl.pallas_call(

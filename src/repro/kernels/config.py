@@ -28,7 +28,10 @@ def get_impl() -> str:
 
 
 def set_impl(impl: str) -> None:
-    assert impl in _VALID, impl
+    if impl not in _VALID:
+        raise ValueError(
+            f"unknown kernel impl {impl!r}: expected one of {_VALID}"
+        )
     _STATE.impl = impl
 
 

@@ -157,7 +157,11 @@ def decode_attention_bkgd(
     B, KVH, G, hd = q.shape
     S = k_cache.shape[2]
     block_k = min(block_k, S)
-    assert S % block_k == 0
+    if S % block_k != 0:
+        raise ValueError(
+            f"decode kernel BlockSpec tiling: cache S={S} is not divisible "
+            f"by block_k={block_k} (k_cache {k_cache.shape})"
+        )
     nk = S // block_k
     scale = 1.0 / math.sqrt(hd)
 

@@ -199,7 +199,11 @@ def flash_attention_bhsd(
     group = H // KVH
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
-    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    if Sq % block_q != 0 or Sk % block_k != 0:
+        raise ValueError(
+            f"flash kernel BlockSpec tiling: Sq={Sq}/Sk={Sk} must divide "
+            f"block_q={block_q}/block_k={block_k} (q {q.shape}, k {k.shape})"
+        )
     nq, nk = Sq // block_q, Sk // block_k
     scale = 1.0 / math.sqrt(hd)
 

@@ -32,7 +32,11 @@ def _xla_flash(
     G = H // KVH
     scale = 1.0 / math.sqrt(hd)
     block_q = min(block_q, Sq)
-    assert Sq % block_q == 0, (Sq, block_q)
+    if Sq % block_q != 0:
+        raise ValueError(
+            f"flash_attention xla path: Sq={Sq} is not divisible by "
+            f"block_q={block_q} (q shape {q.shape})"
+        )
     nq = Sq // block_q
 
     if window is not None:

@@ -101,7 +101,11 @@ def ssd_pallas(
     G, N = Bm.shape[2], Bm.shape[3]
     rep = H // G
     L = min(chunk, S)
-    assert S % L == 0
+    if S % L != 0:
+        raise ValueError(
+            f"ssd kernel chunking: S={S} is not divisible by chunk L={L} "
+            f"(x shape {x.shape})"
+        )
     nc = S // L
 
     xt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]).transpose(

@@ -103,7 +103,11 @@ def wkv6_pallas(
 ):
     B, S, H, D = r.shape
     L = min(chunk, S)
-    assert S % L == 0
+    if S % L != 0:
+        raise ValueError(
+            f"wkv6 kernel chunking: S={S} is not divisible by chunk L={L} "
+            f"(r shape {r.shape})"
+        )
     nc = S // L
     tr = lambda a: a.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,H,S,D)
     s0 = (

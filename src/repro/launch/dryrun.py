@@ -157,6 +157,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
             # (grads/optimizer update reduce-scatter instead of all-reduce)
             # and donate the state buffers
             state_shardings = jax.tree.map(lambda s: s.sharding, state_sds)
+            # abclint: disable=ABC101(AOT lower-compile path — traces exactly once by construction)
             lowered = jax.jit(
                 step, out_shardings=(state_shardings, None), donate_argnums=(0,)
             ).lower(state_sds, batch_sds)
@@ -165,6 +166,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
             batch_sds = _batch_sds(specs, rules, mesh)
             with kcfg.use_impl("pallas"):
                 jcost = estimate_fn_cost(fn, params_sds, batch_sds)
+            # abclint: disable=ABC101(AOT lower-compile path — traces exactly once by construction)
             lowered = jax.jit(fn).lower(params_sds, batch_sds)
         else:  # decode
             fn = functools.partial(api.decode_step, cfg=cfg, window_override=window)
@@ -178,6 +180,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
                 jcost = estimate_fn_cost(
                     fn, params_sds, batch_sds["token"], cache_sds, batch_sds["pos"]
                 )
+            # abclint: disable=ABC101(AOT lower-compile path — traces exactly once by construction)
             lowered = jax.jit(fn).lower(
                 params_sds, batch_sds["token"], cache_sds, batch_sds["pos"]
             )
@@ -278,6 +281,7 @@ def run_cascade(multi_pod: bool, out_dir: str) -> dict:
     t0 = time.time()
     with mesh, axis_rules(rules, mesh):
         jcost = estimate_fn_cost(cascade_step, v1_sds, v2_sds, batch_sds)
+        # abclint: disable=ABC101(AOT lower-compile path — traces exactly once by construction)
         lowered = jax.jit(cascade_step).lower(v1_sds, v2_sds, batch_sds)
         compiled = lowered.compile()
     coll = parse_collectives(compiled.as_text())

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.cascade import host_fetch
 from repro.models import api
 from repro.serve.batching import Request, RequestQueue
 
@@ -191,7 +192,7 @@ class ServingEngine:
         relative to it — padded logits match solo logits)."""
         logits, _ = self._prefill(self.params, self._prefill_batch(tokens, starts))
         self.stats["prefill_tokens"] += tokens.size
-        return np.asarray(logits)
+        return host_fetch(logits)
 
     def _sample(self, logits: jax.Array) -> jax.Array:
         if self.temperature <= 0.0:
@@ -213,7 +214,7 @@ class ServingEngine:
         tok = self._sample(logits)[:, None]
         dec_kw = {} if starts is None else {"starts": jnp.asarray(starts, jnp.int32)}
         for t in range(max_new_tokens):
-            out.append(np.asarray(tok)[:, 0])
+            out.append(host_fetch(tok)[:, 0])
             if t == max_new_tokens - 1:
                 break
             logits, cache = self._decode(
@@ -273,7 +274,7 @@ class ServingEngine:
         stream.submit(requests)
         done: List[Request] = []
         for r, gen in stream.drain():
-            r.output = np.asarray(gen[0], np.int32)
+            r.output = gen[0].astype(np.int32)  # gen is host-side (backend fetched)
             done.append(r)
         self.stats["decode_tokens"] += stream.stats["decode_tokens"]
         self.last_stream_stats = dict(stream.stats)

@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cascade import prompt_chunks
+from repro.core.cascade import host_fetch, prompt_chunks
 from repro.models import api
 from repro.models.params import unbox
 from repro.serve.batching import Request
@@ -303,7 +303,7 @@ class EngineBackend:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tok[0]), self.cache, jnp.asarray(pos)
         )
-        return np.asarray(self._sample(logits))[None]  # (1, n_slots)
+        return host_fetch(self._sample(logits))[None]  # (1, n_slots)
 
     def prefill_chunk(self, tokens, slot, start):
         """Write one pow2 prompt chunk into ``slot`` at offset ``start``."""
@@ -348,7 +348,7 @@ class TierBackend:
             self.tier.values, jnp.asarray(tok), self.caches,
             jnp.asarray(pos), self.rng,
         )
-        return np.asarray(t)[..., 0]  # (E, n_slots)
+        return host_fetch(t)[..., 0]  # (E, n_slots)
 
     def prefill_chunk(self, tokens, slot, start):
         """Write one pow2 prompt chunk into every member's ``slot``."""

@@ -1,11 +1,20 @@
 """Training loop: jitted step + metrics logging + periodic checkpoints."""
 from __future__ import annotations
 
+import functools
 import time
 from typing import Callable, Iterator, Optional
 
 import jax
 import numpy as np
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(train_step: Callable):
+    """Compile-once cache: repeated ``train_loop`` calls over the same
+    ``train_step`` callable reuse one jitted program instead of rebuilding
+    a fresh jit wrapper (and its cache) per call."""
+    return jax.jit(train_step)
 
 
 def train_loop(
@@ -20,7 +29,7 @@ def train_loop(
     log_fn=print,
 ):
     """Runs ``steps`` steps; returns (state, history)."""
-    step_fn = jax.jit(train_step)
+    step_fn = _jitted_step(train_step)
     history = []
     t0 = time.time()
     for i in range(steps):

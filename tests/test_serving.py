@@ -277,3 +277,38 @@ def test_cascade_generate_mode(stacks):
     toks = np.random.default_rng(4).integers(0, 64, (8, 12)).astype(np.int32)
     res = server.generate(toks, max_new_tokens=4)
     assert res.tier_counts.sum() == 8
+
+
+def test_serve_continuous_transfer_guard_single_engine(stacks):
+    """The E=1 continuous-batching path under a device->host transfer
+    guard: any implicit device->host read raises, so the only bytes that
+    cross are the metered host_fetch of one sampled (n_slots,) token row
+    per decode step — and the guarded run generates exactly what the
+    unguarded run does."""
+    import copy
+
+    from repro.core import cascade
+
+    v1, _ = stacks
+    member = ens.take_member(v1, 0)
+    eng = ServingEngine(SMALL, member, max_seq=64)
+    rng = np.random.default_rng(31)
+    reqs = [
+        Request(
+            tokens=rng.integers(0, 64, int(rng.integers(4, 10))).astype(np.int32),
+            max_new_tokens=3,
+        )
+        for _ in range(5)
+    ]
+    ref = eng.serve_continuous([copy.deepcopy(r) for r in reqs], n_slots=2)
+    cascade.reset_host_fetch_stats()
+    with jax.transfer_guard_device_to_host("disallow"):
+        done = eng.serve_continuous([copy.deepcopy(r) for r in reqs], n_slots=2)
+    assert len(done) == 5
+    stats = cascade.host_fetch_stats()
+    # every fetch is one (n_slots,) int32 sampled-token row — nothing else
+    assert stats["bytes"] == stats["calls"] * 2 * 4, stats
+    for a, b in zip(
+        sorted(ref, key=lambda r: r.rid), sorted(done, key=lambda r: r.rid)
+    ):
+        np.testing.assert_array_equal(a.output, b.output)

@@ -1,0 +1,141 @@
+"""abclint CLI.
+
+    python -m tools.abclint [paths...] [--baseline abclint_baseline.json]
+                            [--json] [--update-baseline] [--no-baseline]
+                            [--list-rules]
+
+Exit codes: 0 clean (every finding suppressed by pragma or justified
+baseline entry, no stale entries); 1 findings / stale baseline / invalid
+baseline; 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from tools.abclint.engine import (
+    BASELINE_DEFAULT,
+    DEFAULT_SCOPE,
+    REPO,
+    BaselineError,
+    fingerprinted,
+    load_baseline,
+    run,
+    run_passes,
+    write_baseline,
+)
+from tools.abclint.passes import ALL_PASSES, ALL_RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.abclint",
+        description="repo-specific static analysis for the ABC serving "
+        "stack (retrace / host-sync / determinism / kernel-contract "
+        "invariants, DESIGN.md §9)",
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=None,
+        help=f"repo-relative files/dirs to lint (default: {DEFAULT_SCOPE})",
+    )
+    ap.add_argument(
+        "--baseline", default=BASELINE_DEFAULT,
+        help="suppression baseline JSON (repo-relative; default: "
+        f"{BASELINE_DEFAULT})",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="report every finding, ignoring the baseline",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline to cover current findings (existing "
+        "justifications survive; NEW entries get an empty reason and must "
+        "be justified by hand before the baseline loads again)",
+    )
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(ALL_RULES):
+            print(f"{rule}  {ALL_RULES[rule]}")
+        return 0
+
+    scope = tuple(args.paths) if args.paths else DEFAULT_SCOPE
+    for rel in scope:
+        if not os.path.exists(os.path.join(REPO, rel)):
+            print(f"abclint: no such path in repo: {rel}", file=sys.stderr)
+            return 2
+
+    baseline_path = os.path.join(REPO, args.baseline)
+
+    if args.update_baseline:
+        findings = run_passes(ALL_PASSES, root=REPO, scope=scope)
+        old = {}
+        if os.path.exists(baseline_path):
+            try:
+                old = load_baseline(baseline_path)
+            except BaselineError:
+                old = {}  # rewriting anyway; reasons that load, survive
+        n = write_baseline(baseline_path, findings, old)
+        unreasoned = sum(
+            1 for _, fp in fingerprinted(findings)
+            if not old.get(fp, {}).get("reason")
+        )
+        print(f"abclint: baseline written: {n} entries "
+              f"({unreasoned} need a justification before it loads)")
+        return 0 if unreasoned == 0 else 1
+
+    baseline = {}
+    if not args.no_baseline and os.path.exists(baseline_path):
+        try:
+            baseline = load_baseline(baseline_path)
+        except BaselineError as e:
+            print(f"abclint: invalid baseline: {e}", file=sys.stderr)
+            return 1
+
+    result = run(ALL_PASSES, root=REPO, scope=scope, baseline=baseline)
+
+    if args.as_json:
+        print(json.dumps(
+            {
+                "findings": [
+                    {"rule": f.rule, "path": f.path, "line": f.line,
+                     "message": f.message, "snippet": f.snippet}
+                    for f in result.findings
+                ],
+                "stale_baseline": result.stale_baseline,
+                "summary": {
+                    "findings": len(result.findings),
+                    "baselined": len(result.baselined),
+                    "stale_baseline": len(result.stale_baseline),
+                    "files_scope": list(scope),
+                },
+            },
+            indent=2,
+        ))
+    else:
+        for f in result.findings:
+            print(f.render())
+        for e in result.stale_baseline:
+            print(
+                f"{e.get('path')}: stale baseline entry for {e.get('rule')} "
+                f"({e.get('fingerprint')}) — the code it suppressed is gone; "
+                "remove the entry (the baseline only shrinks)"
+            )
+        n, b, s = (len(result.findings), len(result.baselined),
+                   len(result.stale_baseline))
+        print(
+            f"abclint: {n} finding(s), {b} baselined, {s} stale "
+            f"baseline entr{'y' if s == 1 else 'ies'}"
+        )
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

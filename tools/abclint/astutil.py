@@ -1,0 +1,95 @@
+"""Small AST helpers shared by the abclint passes."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.AST) -> Optional[str]:
+    """Dotted callee name of a Call node ('jax.jit', 'np.asarray', ...)."""
+    if isinstance(node, ast.Call):
+        return dotted(node.func)
+    return None
+
+
+def calls_in(node: ast.AST) -> Iterator[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            yield sub
+
+
+def contains_call_to(node: ast.AST, names: Tuple[str, ...]) -> bool:
+    """True if any call inside ``node`` resolves to one of ``names``
+    (matched on the full dotted path OR its last component, so both
+    ``jax.jit`` and a bare ``jit`` import hit)."""
+    for c in calls_in(node):
+        d = call_name(c)
+        if d is None:
+            continue
+        if d in names or d.split(".")[-1] in {n.split(".")[-1] for n in names}:
+            return True
+    return False
+
+
+def enclosing_functions(tree: ast.AST) -> List[Tuple[ast.AST, List[ast.AST]]]:
+    """(node, [enclosing FunctionDef/AsyncFunctionDef/Lambda chain]) for
+    every node, outermost first.  Lets rules ask 'is this at module level?'
+    and 'what function am I in?' without re-walking per query."""
+    out: List[Tuple[ast.AST, List[ast.AST]]] = []
+
+    def visit(node: ast.AST, stack: List[ast.AST]):
+        out.append((node, list(stack)))
+        push = isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        )
+        if push:
+            stack = stack + [node]
+        for child in ast.iter_child_nodes(node):
+            visit(child, stack)
+
+    visit(tree, [])
+    return out
+
+
+def decorator_names(fn: ast.AST) -> List[str]:
+    """Dotted names of a function's decorators; a decorator that is itself a
+    call (``@functools.lru_cache(maxsize=None)``) reports its callee, and a
+    ``functools.partial(jax.jit, ...)``-style decorator reports the partial
+    target too."""
+    names: List[str] = []
+    for dec in getattr(fn, "decorator_list", []):
+        d = dotted(dec)
+        if d:
+            names.append(d)
+            continue
+        if isinstance(dec, ast.Call):
+            d = dotted(dec.func)
+            if d:
+                names.append(d)
+            for arg in dec.args:
+                a = dotted(arg)
+                if a:
+                    names.append(a)
+    return names
+
+
+def jnp_rooted(node: ast.AST) -> bool:
+    """True if the expression contains a call rooted at jnp/jax.numpy —
+    the cheap static proxy for 'this produces a jax array'."""
+    for c in calls_in(node):
+        d = call_name(c)
+        if d and (d.startswith("jnp.") or d.startswith("jax.numpy.")):
+            return True
+    return False

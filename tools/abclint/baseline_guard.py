@@ -1,0 +1,59 @@
+"""CI guard: the abclint baseline only ever SHRINKS.
+
+    python -m tools.abclint.baseline_guard OLD_BASELINE [NEW_BASELINE]
+
+Compares two baseline files (OLD = the base branch's committed baseline,
+NEW = this branch's — defaults to the repo's ``abclint_baseline.json``)
+and exits nonzero if NEW contains any fingerprint absent from OLD.  New
+suppressions must go through in-code ``# abclint: disable=RULE(reason)``
+pragmas, where review sees the justification next to the code; the
+baseline is a ledger of pre-existing audited debt, paid down over time.
+Stale-entry detection (the other half of shrink-only) lives in the normal
+``python -m tools.abclint`` run, which fails on entries matching nothing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from tools.abclint.engine import BASELINE_DEFAULT, REPO
+
+
+def _fingerprints(path: str) -> set:
+    if not os.path.exists(path):
+        return set()
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    return {e["fingerprint"] for e in data.get("entries", [])}
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) not in (1, 2):
+        print(__doc__, file=sys.stderr)
+        return 2
+    old_path = argv[0]
+    new_path = argv[1] if len(argv) == 2 else os.path.join(
+        REPO, BASELINE_DEFAULT
+    )
+    old, new = _fingerprints(old_path), _fingerprints(new_path)
+    added = sorted(new - old)
+    if added:
+        print(
+            f"abclint baseline grew by {len(added)} entr"
+            f"{'y' if len(added) == 1 else 'ies'} ({', '.join(added)}) — "
+            "the baseline only shrinks; suppress new findings with an "
+            "in-code '# abclint: disable=RULE(reason)' pragma instead",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"abclint baseline ok: {len(new)} entr"
+        f"{'y' if len(new) == 1 else 'ies'} (was {len(old)})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

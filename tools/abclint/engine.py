@@ -1,0 +1,389 @@
+"""abclint core: file walking, pragma handling, baseline compare, reporting.
+
+The engine is deliberately small: it owns everything that is NOT a rule —
+discovering files, parsing them once, collecting ``# abclint:`` pragmas,
+dispatching to the registered passes (tools/abclint/passes/), matching
+findings against the committed suppression baseline, and deciding the exit
+code.  Rules live in the pass modules and only ever see a ``FileContext``.
+
+Suppression model (DESIGN.md §9):
+
+* ``# abclint: disable=RULE(reason)`` — in-code pragma, same line or the
+  line directly above.  The reason is MANDATORY (a reasonless pragma is
+  itself a finding, ABC001) and a pragma that suppresses nothing is a
+  finding too (ABC002), so pragmas cannot rot silently.
+* ``abclint_baseline.json`` — the audited-legitimate debt ledger.  Every
+  entry carries a ``reason`` (empty reasons fail validation) and matches
+  findings by content fingerprint (file + rule + source line text), so
+  entries survive line renumbering but die with the code they describe.
+  A baseline entry that matches nothing is STALE and fails the run: the
+  baseline can shrink as debt is paid, never accumulate unnoticed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import os
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+REPO = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..")
+)
+
+#: directories scanned by default (repo-relative).  tests/ is deliberately
+#: out of scope: its fixtures SEED violations on purpose.
+DEFAULT_SCOPE = ("src/repro", "benchmarks", "tools")
+
+BASELINE_DEFAULT = "abclint_baseline.json"
+
+# pragma grammar: "# abclint: disable=ABC201(reason), ABC303(reason)"
+_PRAGMA_RE = re.compile(r"#\s*abclint:\s*disable=(.+?)\s*$")
+_PRAGMA_ITEM_RE = re.compile(r"(ABC\d{3})\s*(?:\(([^()]*)\))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule hit.  ``snippet`` is the stripped source line — it anchors
+    the baseline fingerprint, so a finding is identified by WHAT the code
+    says, not where it currently sits."""
+
+    rule: str
+    path: str  # repo-relative, '/'-separated
+    line: int  # 1-based; 0 for project-level findings
+    message: str
+    snippet: str = ""
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}" if self.line else self.path
+
+    def render(self) -> str:
+        return f"{self.location()}: {self.rule} {self.message}"
+
+
+def fingerprint(f: Finding, occurrence: int) -> str:
+    """Content fingerprint: stable across line moves, distinct for repeated
+    identical lines in one file (``occurrence`` = 0, 1, ... in line order)."""
+    key = f"{f.path}|{f.rule}|{f.snippet}|{occurrence}"
+    return hashlib.sha1(key.encode("utf-8")).hexdigest()[:16]
+
+
+class Pragma:
+    __slots__ = ("line", "rule", "reason", "used")
+
+    def __init__(self, line: int, rule: str, reason: Optional[str]):
+        self.line = line
+        self.rule = rule
+        self.reason = reason
+        self.used = False
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule may look at for one file (parsed exactly once)."""
+
+    path: str  # repo-relative
+    source: str
+    lines: List[str]
+    tree: ast.AST
+    pragmas: List[Pragma]
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        line = (
+            node_or_line
+            if isinstance(node_or_line, int)
+            else getattr(node_or_line, "lineno", 0)
+        )
+        return Finding(
+            rule=rule,
+            path=self.path,
+            line=line,
+            message=message,
+            snippet=self.line_text(line),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Pass:
+    """One lint pass: a rule table + a per-file checker (and optionally a
+    whole-project checker for structural rules like the kernel trio)."""
+
+    name: str
+    rules: Dict[str, str]  # rule id -> one-line description
+    check_file: Optional[Callable[[FileContext], List[Finding]]] = None
+    check_project: Optional[Callable[[str], List[Finding]]] = None
+    scope: Optional[Callable[[str], bool]] = None  # relpath -> in scope?
+
+    def applies(self, relpath: str) -> bool:
+        return self.scope is None or self.scope(relpath)
+
+
+# ---------------------------------------------------------------------------
+# pragma collection
+# ---------------------------------------------------------------------------
+
+
+def collect_pragmas(lines: Sequence[str]) -> Tuple[List[Pragma], List[Finding]]:
+    """Parse every ``# abclint: disable=...`` comment.  Malformed items
+    (no recognizable RULE token) and reasonless items are ABC001 findings;
+    the well-formed ones come back as ``Pragma`` objects for matching."""
+    pragmas: List[Pragma] = []
+    findings: List[Finding] = []
+    for i, raw in enumerate(lines, start=1):
+        m = _PRAGMA_RE.search(raw)
+        if not m:
+            continue
+        body = m.group(1)
+        items = list(_PRAGMA_ITEM_RE.finditer(body))
+        if not items:
+            findings.append(
+                Finding(
+                    "ABC001", "", i,
+                    "malformed abclint pragma: expected disable=RULE(reason)",
+                    raw.strip(),
+                )
+            )
+            continue
+        for item in items:
+            rule, reason = item.group(1), item.group(2)
+            if not reason or not reason.strip():
+                findings.append(
+                    Finding(
+                        "ABC001", "", i,
+                        f"pragma for {rule} has no justification — write "
+                        f"disable={rule}(why this line is legitimate)",
+                        raw.strip(),
+                    )
+                )
+                continue
+            pragmas.append(Pragma(i, rule, reason.strip()))
+    return pragmas, findings
+
+
+def _pragma_targets(p: Pragma, lines: Sequence[str]) -> Tuple[int, ...]:
+    """Lines a pragma suppresses: its own line, or — when the pragma sits on
+    a comment-only line — the next non-blank line below it."""
+    own = lines[p.line - 1].strip()
+    if own.startswith("#"):
+        for j in range(p.line + 1, len(lines) + 1):
+            if lines[j - 1].strip():
+                return (p.line, j)
+        return (p.line,)
+    return (p.line,)
+
+
+def apply_pragmas(ctx: FileContext, findings: List[Finding]) -> List[Finding]:
+    """Drop findings covered by a matching pragma; flag unused pragmas."""
+    kept: List[Finding] = []
+    targets = {p: _pragma_targets(p, ctx.lines) for p in ctx.pragmas}
+    for f in findings:
+        suppressor = None
+        for p in ctx.pragmas:
+            if p.rule == f.rule and f.line in targets[p]:
+                suppressor = p
+                break
+        if suppressor is not None:
+            suppressor.used = True
+        else:
+            kept.append(f)
+    for p in ctx.pragmas:
+        if not p.used:
+            kept.append(
+                ctx.finding(
+                    "ABC002", p.line,
+                    f"pragma disable={p.rule} suppresses nothing — remove it",
+                )
+            )
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+class BaselineError(ValueError):
+    """The baseline file itself is invalid (bad JSON / missing reasons)."""
+
+
+def load_baseline(path: str) -> Dict[str, dict]:
+    """Load ``{fingerprint: entry}``.  Every entry must carry a non-empty
+    ``reason`` — the baseline is a ledger of AUDITED debt, not a mute list."""
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    if not isinstance(data, dict) or "entries" not in data:
+        raise BaselineError(f"{path}: expected an object with 'entries'")
+    out: Dict[str, dict] = {}
+    for e in data["entries"]:
+        fp = e.get("fingerprint")
+        if not fp:
+            raise BaselineError(f"{path}: entry without fingerprint: {e}")
+        if not str(e.get("reason", "")).strip():
+            raise BaselineError(
+                f"{path}: entry {e.get('rule')}@{e.get('path')} ({fp}) has "
+                "no justification — every suppression needs a reason"
+            )
+        out[fp] = e
+    return out
+
+
+def write_baseline(path: str, findings: List[Finding],
+                   old: Optional[Dict[str, dict]] = None) -> int:
+    """Write a baseline covering ``findings``.  Reasons survive for
+    fingerprints already baselined; NEW entries get an empty reason, which
+    ``load_baseline`` rejects — so a refreshed baseline cannot be committed
+    until a human has justified every new suppression."""
+    old = old or {}
+    entries = []
+    for f, fp in fingerprinted(findings):
+        entries.append(
+            {
+                "fingerprint": fp,
+                "rule": f.rule,
+                "path": f.path,
+                "snippet": f.snippet,
+                "reason": old.get(fp, {}).get("reason", ""),
+            }
+        )
+    entries.sort(key=lambda e: (e["path"], e["rule"], e["snippet"]))
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": 1, "entries": entries}, fh, indent=2)
+        fh.write("\n")
+    return len(entries)
+
+
+def fingerprinted(findings: List[Finding]) -> List[Tuple[Finding, str]]:
+    """Pair each finding with its occurrence-disambiguated fingerprint."""
+    seen: Dict[Tuple[str, str, str], int] = {}
+    out = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line)):
+        key = (f.path, f.rule, f.snippet)
+        k = seen.get(key, 0)
+        seen[key] = k + 1
+        out.append((f, fingerprint(f, k)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# running
+# ---------------------------------------------------------------------------
+
+
+#: the linter's own source is wall-to-wall rule-pattern literals and pragma
+#: grammar strings — scanning it is pure self-referential noise; its
+#: correctness is owned by tests/test_abclint.py's fixtures instead
+_SELF = "tools/abclint"
+
+
+def _iter_py_files(root: str, scope: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    self_abs = os.path.join(root, _SELF)
+    for rel in scope:
+        top = os.path.join(root, rel)
+        if os.path.isfile(top) and top.endswith(".py"):
+            files.append(top)
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [
+                d for d in dirnames
+                if not d.startswith(".") and d != "__pycache__"
+            ]
+            if os.path.commonpath([dirpath, self_abs]) == self_abs:
+                continue
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    files.append(os.path.join(dirpath, fn))
+    return sorted(set(files))
+
+
+def make_context(root: str, abspath: str) -> Optional[FileContext]:
+    rel = os.path.relpath(abspath, root).replace(os.sep, "/")
+    with open(abspath, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError:
+        return None  # unparseable files are a job for python, not abclint
+    pragmas, _ = collect_pragmas(source.splitlines())
+    return FileContext(
+        path=rel,
+        source=source,
+        lines=source.splitlines(),
+        tree=tree,
+        pragmas=pragmas,
+    )
+
+
+@dataclasses.dataclass
+class RunResult:
+    findings: List[Finding]  # unsuppressed, unbaselined
+    baselined: List[Finding]
+    stale_baseline: List[dict]
+    all_findings: List[Finding]  # pre-baseline (post-pragma)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.stale_baseline
+
+
+def run_passes(
+    passes: Sequence[Pass],
+    *,
+    root: str = REPO,
+    scope: Sequence[str] = DEFAULT_SCOPE,
+) -> List[Finding]:
+    """All findings after pragma filtering, before baseline matching."""
+    findings: List[Finding] = []
+    for abspath in _iter_py_files(root, scope):
+        ctx = make_context(root, abspath)
+        if ctx is None:
+            continue
+        # pragma syntax findings carry the file path themselves
+        _, pragma_findings = collect_pragmas(ctx.lines)
+        file_findings = [
+            dataclasses.replace(f, path=ctx.path) for f in pragma_findings
+        ]
+        for p in passes:
+            if p.check_file is not None and p.applies(ctx.path):
+                file_findings.extend(p.check_file(ctx))
+        findings.extend(apply_pragmas(ctx, file_findings))
+    for p in passes:
+        if p.check_project is not None:
+            findings.extend(p.check_project(root))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def run(
+    passes: Sequence[Pass],
+    *,
+    root: str = REPO,
+    scope: Sequence[str] = DEFAULT_SCOPE,
+    baseline: Optional[Dict[str, dict]] = None,
+) -> RunResult:
+    all_findings = run_passes(passes, root=root, scope=scope)
+    baseline = baseline or {}
+    new: List[Finding] = []
+    matched: List[Finding] = []
+    used_fps = set()
+    for f, fp in fingerprinted(all_findings):
+        if fp in baseline:
+            used_fps.add(fp)
+            matched.append(f)
+        else:
+            new.append(f)
+    stale = [e for fp, e in sorted(baseline.items()) if fp not in used_fps]
+    new.sort(key=lambda f: (f.path, f.line, f.rule))
+    return RunResult(
+        findings=new,
+        baselined=matched,
+        stale_baseline=stale,
+        all_findings=all_findings,
+    )

@@ -1,0 +1,26 @@
+"""The four abclint passes (DESIGN.md §9).  ``ALL_PASSES`` is the
+registry the CLI and the tests run; adding a rule means adding it to a
+pass module's ``RULES`` table and its checker, nothing else."""
+from __future__ import annotations
+
+from tools.abclint.passes import (
+    determinism,
+    host_sync,
+    kernel_contract,
+    retrace,
+)
+
+ALL_PASSES = (
+    retrace.PASS,
+    host_sync.PASS,
+    determinism.PASS,
+    kernel_contract.PASS,
+)
+
+#: every known rule id -> description (including the engine's pragma rules)
+ALL_RULES = {
+    "ABC001": "abclint pragma without a justification",
+    "ABC002": "abclint pragma that suppresses nothing",
+}
+for _p in ALL_PASSES:
+    ALL_RULES.update(_p.rules)

@@ -1,0 +1,144 @@
+"""Pass 3 — determinism (ABC3xx).
+
+The third serving invariant is BIT-DETERMINISM: greedy cascades generate
+bitwise-identically across processes, hosts, and transport overlap modes
+(DESIGN.md §8's equivalence claim).  PR 1's worst bug was exactly this
+class — ``hash(bytes)`` is PYTHONHASHSEED-salted per process, so identical
+member generations voted differently across runs until voting moved to a
+stable crc32 digest.
+
+Scope: ``src/repro/core/`` and ``src/repro/serve/`` — the code whose
+outputs the equivalence tests assert bitwise-equal.
+
+ABC301  builtin ``hash()`` — process-salted for str/bytes; never feed it
+        into anything that crosses a process boundary.  Use a stable
+        digest (``zlib.crc32``, ``hashlib``).
+ABC302  iterating a ``set`` (or ``set()``/set-comprehension result) —
+        iteration order is hash order; results that depend on it are not
+        reproducible.  ``sorted(set(...))`` is exempt (order restored).
+ABC303  wall-clock / seed-free randomness feeding computation:
+        ``time.time``/``datetime.now`` and the seed-free global RNGs
+        (``random.*``, legacy ``np.random.*``, argless
+        ``np.random.default_rng()``).  Monotonic METERING clocks
+        (``time.perf_counter``/``monotonic``) and ``time.sleep`` are
+        exempt — they time work, they don't steer it; seeded
+        ``default_rng(seed)`` / ``jax.random`` keys are the blessed
+        randomness.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.abclint import astutil
+from tools.abclint.engine import FileContext, Finding, Pass
+
+RULES = {
+    "ABC301": "builtin hash() (PYTHONHASHSEED-salted: irreproducible "
+              "across processes — use zlib.crc32/hashlib)",
+    "ABC302": "iteration over a set (hash-ordered: result order is not "
+              "reproducible — sort it first)",
+    "ABC303": "wall-clock or seed-free randomness feeding computation "
+              "(time.time/random.*/legacy np.random/argless default_rng)",
+}
+
+_CLOCK_BANNED = {"time.time", "datetime.now", "datetime.utcnow",
+                 "datetime.datetime.now", "datetime.datetime.utcnow"}
+_NP_LEGACY = {
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "permutation", "shuffle", "standard_normal", "uniform", "normal",
+    "seed",
+}
+_PY_RANDOM = {
+    "random.random", "random.randint", "random.choice", "random.shuffle",
+    "random.uniform", "random.sample", "random.randrange", "random.seed",
+    "random.gauss",
+}
+
+
+def in_scope(relpath: str) -> bool:
+    return relpath.startswith(("src/repro/core/", "src/repro/serve/"))
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        d = astutil.call_name(node)
+        return d in ("set", "frozenset")
+    return False
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    sorted_args = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and astutil.call_name(node) == "sorted":
+            for a in node.args:
+                sorted_args.add(id(a))
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            d = astutil.call_name(node)
+            if d == "hash":
+                findings.append(
+                    ctx.finding(
+                        "ABC301", node,
+                        "hash() is salted per process — identical inputs "
+                        "digest differently across runs; use zlib.crc32 "
+                        "(serve.cascade_server.stable_digest) or hashlib",
+                    )
+                )
+            elif d in _CLOCK_BANNED or d in _PY_RANDOM:
+                findings.append(
+                    ctx.finding(
+                        "ABC303", node,
+                        f"{d}() in deterministic scope — wall clock / "
+                        "seed-free randomness makes runs irreproducible; "
+                        "meter with time.perf_counter, randomize with a "
+                        "seeded rng",
+                    )
+                )
+            elif d is not None and d.startswith("np.random."):
+                tail = d.split(".")[-1]
+                if tail in _NP_LEGACY:
+                    findings.append(
+                        ctx.finding(
+                            "ABC303", node,
+                            f"{d} uses numpy's seed-free global generator "
+                            "— use np.random.default_rng(seed)",
+                        )
+                    )
+                elif tail == "default_rng" and not node.args:
+                    findings.append(
+                        ctx.finding(
+                            "ABC303", node,
+                            "np.random.default_rng() without a seed is "
+                            "entropy-seeded — pass an explicit seed",
+                        )
+                    )
+        iters = []
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            iters.append(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                               ast.DictComp)):
+            iters.extend(g.iter for g in node.generators)
+        elif isinstance(node, ast.Call) and astutil.call_name(node) in (
+            "list", "tuple", "enumerate"
+        ):
+            iters.extend(node.args[:1])
+        for it in iters:
+            if _is_set_expr(it) and id(it) not in sorted_args:
+                findings.append(
+                    ctx.finding(
+                        "ABC302", it,
+                        "iterating a set in deterministic scope — order is "
+                        "hash order; wrap in sorted() before anything that "
+                        "feeds results",
+                    )
+                )
+    return findings
+
+
+PASS = Pass(
+    name="determinism", rules=RULES, check_file=check_file, scope=in_scope
+)

@@ -1,0 +1,182 @@
+"""Pass 2 — host-sync leaks (ABC2xx).
+
+The second serving invariant is DEVICE RESIDENCE: on the defer path the
+host reads exactly one count scalar per tier transition, through the
+byte-metered ``core.cascade._fetch``, and payload bytes only ever cross a
+boundary inside a metered ``serve.transport.Transport`` hop.  PR 3 proved
+this dynamically with ``jax.transfer_guard`` tests at a handful of call
+sites; this pass is the static twin, repo-wide over the serving hot path.
+
+Scope: ``src/repro/serve/`` and ``src/repro/core/cascade.py`` — the two
+places where an implicit device→host transfer is a correctness-of-cost
+bug, not a style nit.  ``serve/transport.py`` is whitelisted wholesale
+(it IS the metered boundary), as is the body of ``_fetch`` itself.
+
+ABC201  ``.item()`` — the classic silent scalar sync.
+ABC202  ``int()``/``float()``/``bool()`` over a call/subscript expression
+        (the usual shape is ``bool(np.asarray(x)[0])``).  Conversions of
+        ``_fetch(...)`` results, ``len``/``min``/``max``/``sum``/shape
+        arithmetic and friends are host-side and exempt.
+ABC203  ``np.asarray``/``np.array`` — numpy coercion of a jax array is an
+        unmetered device→host gather.  Wrapping an explicit fetch
+        (``np.asarray(jax.device_get(...))`` / ``_fetch(...)``) is exempt;
+        everything else is either a genuine leak (fix: route through
+        ``_fetch``) or host-side list handling (pragma/baseline it, with
+        the reason).
+ABC204  ``jax.device_get`` outside ``_fetch``/``Transport`` — explicit,
+        but unmetered: byte accounting can't see it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.abclint import astutil
+from tools.abclint.engine import FileContext, Finding, Pass
+
+RULES = {
+    "ABC201": ".item() on an array (silent device->host scalar sync)",
+    "ABC202": "int()/float()/bool() over an array expression (unmetered "
+              "host sync — convert a _fetch'd value instead)",
+    "ABC203": "np.asarray/np.array on the serving hot path (unmetered "
+              "device->host gather — route through cascade._fetch)",
+    "ABC204": "jax.device_get outside the metered _fetch/Transport path",
+}
+
+#: files where crossing the boundary is the module's JOB
+_FILE_WHITELIST = ("src/repro/serve/transport.py",)
+#: functions whose body is the blessed explicit-fetch implementation
+_FUNC_WHITELIST = {"_fetch", "host_fetch"}
+
+#: call roots whose results are host values (safe to int()/float()/bool())
+_HOST_CALLS = {
+    "_fetch", "cascade._fetch", "host_fetch", "cascade.host_fetch", "len",
+    "min", "max", "sum", "round", "abs", "sorted", "time.perf_counter",
+    "time.monotonic", "np.prod", "host_fetch_stats",
+}
+_HOST_ATTR_TAILS = (".shape", ".size", ".ndim")
+
+
+def in_scope(relpath: str) -> bool:
+    if relpath in _FILE_WHITELIST:
+        return False
+    return (
+        relpath.startswith("src/repro/serve/")
+        or relpath == "src/repro/core/cascade.py"
+    )
+
+
+def _host_rooted(node: ast.AST) -> bool:
+    """Conversion argument recognizably produces a HOST value."""
+    if isinstance(node, ast.Call):
+        d = astutil.call_name(node)
+        if d is not None and (
+            d in _HOST_CALLS or d.split(".")[-1] in {
+                n.split(".")[-1] for n in _HOST_CALLS
+            }
+        ):
+            return True
+        return False
+    if isinstance(node, ast.Subscript):
+        base = node.value
+        d = astutil.dotted(base)
+        if d is not None and d.endswith(_HOST_ATTR_TAILS[0][1:]):
+            return True
+        if isinstance(base, ast.Attribute) and (
+            "." + base.attr
+        ) in _HOST_ATTR_TAILS:
+            return True
+        return _host_rooted(base)
+    if isinstance(node, ast.Attribute):
+        return ("." + node.attr) in _HOST_ATTR_TAILS
+    if isinstance(node, ast.BinOp):
+        return _host_rooted(node.left) and _host_rooted(node.right)
+    return False
+
+
+def _explicit_fetch(node: ast.AST) -> bool:
+    """The expression wraps an explicit fetch (device_get/_fetch/.result())."""
+    for call in astutil.calls_in(node):
+        d = astutil.call_name(call)
+        if d is None:
+            continue
+        tail = d.split(".")[-1]
+        if tail in ("device_get", "_fetch", "host_fetch", "result"):
+            return True
+    return False
+
+
+def _whitelisted(stack: List[ast.AST]) -> bool:
+    return any(
+        getattr(fn, "name", None) in _FUNC_WHITELIST for fn in stack
+    )
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for node, stack in astutil.enclosing_functions(ctx.tree):
+        if not isinstance(node, ast.Call) or _whitelisted(stack):
+            continue
+        d = astutil.call_name(node)
+        if d is None:
+            # method call on an arbitrary expression: catch .item()
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"
+            ):
+                findings.append(
+                    ctx.finding(
+                        "ABC201", node,
+                        ".item() syncs device->host unmetered — fetch via "
+                        "cascade._fetch and index the host array",
+                    )
+                )
+            continue
+        tail = d.split(".")[-1]
+        if tail == "item":
+            findings.append(
+                ctx.finding(
+                    "ABC201", node,
+                    ".item() syncs device->host unmetered — fetch via "
+                    "cascade._fetch and index the host array",
+                )
+            )
+        elif d in ("int", "float", "bool") and node.args:
+            arg = node.args[0]
+            if (
+                isinstance(arg, (ast.Call, ast.Subscript))
+                and not _host_rooted(arg)
+                and not _explicit_fetch(arg)
+            ):
+                findings.append(
+                    ctx.finding(
+                        "ABC202", node,
+                        f"{d}() over an array expression is an unmetered "
+                        "host sync — fetch through cascade._fetch first",
+                    )
+                )
+        elif d in ("np.asarray", "np.array", "numpy.asarray", "numpy.array"):
+            if node.args and not _explicit_fetch(node.args[0]):
+                findings.append(
+                    ctx.finding(
+                        "ABC203", node,
+                        f"{d} on the serving hot path — if the argument "
+                        "can be a jax array this is an unmetered gather; "
+                        "route through cascade._fetch (or justify via "
+                        "pragma/baseline if it is host-side data)",
+                    )
+                )
+        elif tail == "device_get":
+            findings.append(
+                ctx.finding(
+                    "ABC204", node,
+                    "jax.device_get outside _fetch/Transport — explicit "
+                    "but unmetered; byte accounting cannot see it",
+                )
+            )
+    return findings
+
+
+PASS = Pass(
+    name="host_sync", rules=RULES, check_file=check_file, scope=in_scope
+)

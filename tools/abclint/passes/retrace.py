@@ -1,0 +1,121 @@
+"""Pass 1 — retrace hazards (ABC1xx).
+
+The serving stack's first invariant is COMPILE ONCE: every jitted program
+lives in a module-level cache (``serve.engine.model_programs``,
+``serve.cascade_server.tier_programs``) and trace counters prove zero
+retrace after warmup.  The hazard class this pass freezes out is the one
+that silently re-trace on every call:
+
+ABC101  ``jax.jit`` / ``pl.pallas_call`` constructed inside a plain
+        function body.  Each call builds a FRESH jitted callable whose
+        cache dies with it — the per-request retrace the PR 1 program
+        caches exist to eliminate.  Allowed: module level (including
+        module-level decorators) and factories memoized with
+        ``functools.lru_cache``/``functools.cache`` (the repo's program-
+        cache idiom).
+
+ABC102  a ``lambda`` passed to ``jax.jit``: lambdas compare by identity,
+        so even a module-level cache keyed on the function object misses
+        every time one is rebuilt.
+
+ABC103  Python branching (``if``/``while``/ternary/``assert``) on an
+        expression that calls into ``jnp.``/``jax.numpy.`` — under a jit
+        trace that is a TracerBoolConversionError at best and a silent
+        host sync + retrace fork at worst.  Static dtype predicates
+        (``jnp.issubdtype``/``jnp.isdtype``) are exempt: they run on
+        types, not values.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.abclint import astutil
+from tools.abclint.engine import FileContext, Finding, Pass
+
+_JIT_NAMES = ("jax.jit", "pl.pallas_call", "pallas_call")
+#: decorators that make in-function program construction compile-once:
+#: memoized factories (the program-cache idiom) and module-level jit
+#: decoration (the constructed pallas_call is traced once per shape by the
+#: function's own jit cache)
+_CACHE_DECOS = {
+    "functools.lru_cache", "lru_cache", "functools.cache", "cache",
+    "jax.jit", "jit",
+}
+_STATIC_PREDICATES = {
+    "jnp.issubdtype", "jnp.isdtype", "jax.numpy.issubdtype",
+    "jax.numpy.isdtype",
+}
+
+RULES = {
+    "ABC101": "jax.jit/pl.pallas_call constructed inside a function "
+              "(use a module-level or lru_cache'd program cache)",
+    "ABC102": "lambda passed to jax.jit (identity-keyed: every rebuild is "
+              "a cache miss)",
+    "ABC103": "Python branch on a jnp/jax.numpy expression (tracer "
+              "boolification / hidden host sync)",
+}
+
+
+def _in_cached_factory(stack: List[ast.AST]) -> bool:
+    for fn in stack:
+        if set(astutil.decorator_names(fn)) & _CACHE_DECOS:
+            return True
+    return False
+
+
+def _branch_hazard(test: ast.AST) -> bool:
+    for call in astutil.calls_in(test):
+        d = astutil.call_name(call)
+        if d is None:
+            continue
+        if d in _STATIC_PREDICATES:
+            continue
+        if d.startswith("jnp.") or d.startswith("jax.numpy."):
+            return True
+    return False
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for node, stack in astutil.enclosing_functions(ctx.tree):
+        if isinstance(node, ast.Call):
+            name = astutil.call_name(node)
+            if name in _JIT_NAMES or (
+                name is not None and name.split(".")[-1] == "pallas_call"
+            ):
+                if stack and not _in_cached_factory(stack):
+                    findings.append(
+                        ctx.finding(
+                            "ABC101", node,
+                            f"{name} constructed inside "
+                            f"{getattr(stack[-1], 'name', '<lambda>')}(): "
+                            "the program cache dies with the call — hoist "
+                            "to module level or an lru_cache'd factory",
+                        )
+                    )
+            if name == "jax.jit" or name == "jit":
+                if node.args and isinstance(node.args[0], ast.Lambda):
+                    findings.append(
+                        ctx.finding(
+                            "ABC102", node,
+                            "lambda passed to jax.jit — name the function "
+                            "(module level) so the jit cache can key on it",
+                        )
+                    )
+        test = None
+        if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+            test = node.test
+        if test is not None and _branch_hazard(test):
+            findings.append(
+                ctx.finding(
+                    "ABC103", node,
+                    "branching on a jnp expression — this forces the value "
+                    "to host (and breaks under jit tracing); compute the "
+                    "predicate with jnp.where or fetch explicitly",
+                )
+            )
+    return findings
+
+
+PASS = Pass(name="retrace", rules=RULES, check_file=check_file)
