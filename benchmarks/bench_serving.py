@@ -11,7 +11,14 @@ Also measures the cross-host continuous-serving overlap (DESIGN.md §8):
 the same cascade behind a real-sleep ``AsyncTransport`` edge→cloud link,
 serial (blocking hops) vs overlapped (hops drain at admission points) —
 reported as ``overlap_ratio`` = serial / overlapped makespan, with
-generations asserted identical."""
+generations asserted identical.
+
+Block-paged KV pools (DESIGN.md §10) are gated here too: at the HBM
+budget of a dense 4-slot cache, the paged pool must carry 4x the resident
+slots on mixed-length traffic with zero forced completions, cascade
+generations must be bitwise-identical paged vs dense, and the E-fold
+shared-prefix saving (one page table across all tier member planes) is
+reported in MB of pool writes skipped."""
 from __future__ import annotations
 
 import math
@@ -101,7 +108,12 @@ def run(verbose=True):
         stream.submit(admit_reqs()[:1])
         t0 = time.perf_counter()
         stream.refill()
-        jax.block_until_ready(stream.backend.cache)
+        # paged backends keep device state in the page pool, dense in the
+        # slot cache — block on whichever this stream actually owns
+        jax.block_until_ready(
+            stream.backend.pool_dev if stream.backend.paged
+            else stream.backend.cache
+        )
         admit_ms = (time.perf_counter() - t0) * 1e3
 
     eng.serve_continuous(admit_reqs(), n_slots=n_admit,
@@ -114,6 +126,105 @@ def run(verbose=True):
     assert calls_per_admit <= math.ceil(math.log2(P)), (
         f"{P}-token prompt took {calls_per_admit} bucket calls"
     )
+
+    # --- block-paged KV pools (DESIGN.md §10) ------------------------------
+    # (a) equal-HBM concurrency: a dense 4-slot x 256-row cache holds 1024
+    # KV rows; give the paged pool the same row budget (64 pages of 16,
+    # plus the never-allocated overflow sink) and it carries 16 resident
+    # slots of mixed-length traffic — 4x the admitted concurrency at equal
+    # cache HBM — without a single forced completion or admit failure.
+    ps, dense_slots, paged_slots = 16, 4, 16
+    budget_pages = dense_slots * (256 // ps)
+    mix_rng = np.random.default_rng(5)
+    n_mix = 12 if smoke_mode() else 24
+
+    def _mixed_requests():
+        return [
+            Request(tokens=mix_rng.integers(0, 256, int(L)).astype(np.int32),
+                    max_new_tokens=4)
+            for L in mix_rng.integers(8, 49, n_mix)
+        ]
+
+    pstream = eng.slot_stream(n_slots=paged_slots, max_seq=256, paged=True,
+                              page_size=ps, n_pages=budget_pages + 1)
+    pstream.submit(_mixed_requests())
+    t0 = time.perf_counter()
+    for _ in pstream.drain():
+        pass
+    paged_wall = time.perf_counter() - t0
+    pool = pstream.backend.pool
+    assert pstream.stats["forced_completions"] == 0, pstream.stats
+    assert pstream.stats["admit_failures"] == 0, pstream.stats
+    assert pool.pages_in_use == 0
+    pool.assert_conserved()
+    peak_pages = pool.stats["peak_pages_in_use"]
+    concurrency_x = paged_slots / dense_slots
+
+    # (b) paged == dense bitwise through the full cascade (greedy): same
+    # routing, same tiers, same generations — the pool is a memory layout,
+    # not a numeric change
+    parity = CascadeServer([
+        CascadeTier(SMALL, v1, TierSpec("t1", "vote", 0.67, k=3, cost=1.0)),
+        CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1,
+                                      cost=30.0)),
+    ])
+
+    def _parity_requests():
+        r = np.random.default_rng(7)
+        return [
+            Request(tokens=r.integers(0, 256, int(L)).astype(np.int32),
+                    max_new_tokens=4)
+            for L in r.integers(8, 33, 8)
+        ]
+
+    parity_out = {}
+    for paged in (False, True):
+        done = parity.serve_continuous(_parity_requests(), n_slots=4,
+                                       max_seq=64, paged=paged, page_size=8)
+        parity_out[paged] = {
+            tuple(r.tokens.tolist()): (r.tier, tuple(r.output.tolist()))
+            for r in done
+        }
+    assert parity_out[True] == parity_out[False], (
+        "paged cascade generations must be bitwise-identical to dense"
+    )
+
+    # (c) E-fold shared-prefix reuse: one page table serves all E member
+    # planes of a tier pool, so every shared-prefix page hit skips E page
+    # copies' worth of HBM, not one
+    from repro.serve import SlotStream, TierBackend
+
+    pre_rng = np.random.default_rng(9)
+    prefix = pre_rng.integers(0, 256, 24).astype(np.int32)
+
+    def _prefix_requests():
+        return [
+            Request(
+                tokens=np.concatenate(
+                    [prefix, pre_rng.integers(0, 256, int(t)).astype(np.int32)]
+                ),
+                max_new_tokens=3,
+            )
+            for t in pre_rng.integers(2, 9, 6)
+        ]
+
+    tb = TierBackend(parity.tiers[0], n_slots=4, max_seq=64, paged=True,
+                     page_size=8)
+    tstream = SlotStream(tb, n_slots=4, max_seq=64)
+    tstream.submit(_prefix_requests())
+    for _ in tstream.drain():
+        pass
+    E = parity.tiers[0].k
+    shared_hits = tb.pool.stats["shared_hits"]
+    assert shared_hits > 0, "shared-prefix traffic produced no index hits"
+    # per-page bytes across every layer AND every member plane: the page
+    # axis sits at ndim-4, so nbytes // n_pages already counts E planes
+    page_bytes = sum(
+        leaf.nbytes // leaf.shape[leaf.ndim - 4]
+        for leaf in jax.tree.leaves(tb.pool_dev)
+    )
+    efold_saved_mb = shared_hits * page_bytes / 1e6
+    efold_saved_1plane_mb = efold_saved_mb / E
 
     # --- overlapped cross-host continuous serving (DESIGN.md §8) -----------
     # the shared harness (benchmarks/common.py measure_overlap) asserts the
@@ -155,6 +266,14 @@ def run(verbose=True):
               f"retraces {admission_retraces}; serve wall "
               f"{chunk_wall:.2f}s chunked vs {plain_wall:.2f}s decode-only "
               f"({plain_wall/chunk_wall:.1f}x)")
+        print(f"# paged KV pool: {paged_slots} resident slots on a dense "
+              f"{dense_slots}-slot HBM budget ({budget_pages} pages of {ps}; "
+              f"peak {peak_pages} in use) = {concurrency_x:.0f}x concurrency, "
+              f"{n_mix} mixed-length requests in {paged_wall:.2f}s, 0 forced "
+              f"completions; cascade generations bitwise == dense")
+        print(f"# shared-prefix reuse (E={E} tier): {shared_hits} page hits "
+              f"-> {efold_saved_mb:.3f} MB of pool writes skipped "
+              f"({efold_saved_1plane_mb:.3f} MB/plane x {E} member planes)")
         print(f"# cross-host continuous: {ovl_link.total_examples} deferrals "
               f"over a {delay*1e3:.0f}ms link; makespan {wall_ser*1e3:.0f}ms "
               f"serial -> {wall_ovl*1e3:.0f}ms overlapped "
@@ -168,5 +287,7 @@ def run(verbose=True):
         f"cost_vs_all_big={res.cost/(30.0*len(toks)):.2f};"
         f"admit_calls_per_{P}tok={calls_per_admit:.0f};admit_ms={admit_ms:.1f};"
         f"admit_speedup_vs_decode_feed={plain_wall/chunk_wall:.1f};"
+        f"paged_concurrency_x={concurrency_x:.0f};paged_peak_pages={peak_pages};"
+        f"efold_prefix_saved_mb={efold_saved_mb:.3f};"
         f"overlap_ratio={overlap_ratio:.2f}",
     )

@@ -246,16 +246,32 @@ def cascade_apply_routed(
 
     active_idx = jnp.arange(B, dtype=jnp.int32)  # local row -> original row
     m = B
+    landed_tr = None  # transport whose placement `cur`'s rows currently honor
     for i, (fn, spec) in enumerate(zip(tier_fns, specs)):
         defer_c, p_c, s_c = [], [], []
         charged = 0
         off = 0
         for c in bucket_chunks(m, pad_to):
             take = min(c, m - off)
-            fed = {
-                k: _pad_rows(jax.lax.slice_in_dim(v, off, off + take), c)
-                for k, v in cur.items()
-            }
+            if off == 0 and c == int(jax.tree.leaves(cur)[0].shape[0]):
+                # the delivered payload IS this chunk (single-bucket cover):
+                # feed it exactly as the transport landed it — no slice, no
+                # re-layout, rows keep their data-sharded residency
+                fed = cur
+            else:
+                fed = {
+                    k: _pad_rows(jax.lax.slice_in_dim(v, off, off + take), c)
+                    for k, v in cur.items()
+                }
+                if landed_tr is not None:
+                    # slicing/padding re-laid the rows (XLA picks its own
+                    # output sharding for eager slices); put each chunk back
+                    # onto the transport's example sharding so a hand-off
+                    # landed data-sharded is never silently re-replicated
+                    fed = {
+                        k: jax.device_put(v, landed_tr.example_sharding(v))
+                        for k, v in fed.items()
+                    }
             logits = fn(fed)
             out = deferral.apply_rule(spec.rule, logits, spec.theta)
             defer_c.append(out.defer[:take])
@@ -316,6 +332,10 @@ def cascade_apply_routed(
                 hop_names[i], hop_names[i + 1], payload, n_examples=n_defer
             )
             payload = {k: jnp.asarray(v) for k, v in handle.result().items()}
+        # rows now live where THIS boundary's transport put them; the next
+        # tier's chunking must preserve that residency (sharded hand-offs
+        # expose example_sharding; others have no placement to honor)
+        landed_tr = tr if hasattr(tr, "example_sharding") else None
         active_idx = payload.pop("__idx")[:n_defer]
         cur = payload
         m = n_defer

@@ -97,15 +97,23 @@ def compact_indices(mask: jax.Array):
     return index_map, count
 
 
+def gather_rows(x: jax.Array, index_map: jax.Array):
+    """Row-gather over a precomputed index map: out[i] = x[index_map[i]],
+    zero rows where index_map[i] < 0.  Exact for every dtype.  The output
+    has index_map's row count — callers may gather more or fewer rows than
+    ``x`` holds (the paged-KV view gathers per-slot page lists out of a
+    shared pool)."""
+    trail = x.shape[1:]
+    x2 = x.reshape(x.shape[0], int(np.prod(trail)) if trail else 1)
+    safe = jnp.where(index_map >= 0, index_map, 0)
+    out = jnp.where((index_map >= 0)[:, None], x2[safe], 0)
+    return out.reshape((index_map.shape[0],) + trail)
+
+
 def _gather_rows(x: jax.Array, index_map: jax.Array):
     """Compacted payload by device row-gather over a precomputed index map
     (exact for every dtype; rows past the count come out zero)."""
-    B = x.shape[0]
-    trail = x.shape[1:]
-    x2 = x.reshape(B, int(np.prod(trail)) if trail else 1)
-    safe = jnp.where(index_map >= 0, index_map, 0)
-    out = jnp.where((index_map >= 0)[:, None], x2[safe], 0)
-    return out.reshape((B,) + trail)
+    return gather_rows(x, index_map)
 
 
 def compact_tree(tree, mask: jax.Array):

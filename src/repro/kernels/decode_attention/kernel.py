@@ -106,6 +106,92 @@ def _decode_kernel(
         o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def decode_attention_paged_bkgd(
+    q: jax.Array,  # (B, KVH, G, hd)
+    k_pool: jax.Array,  # (P, KVH, page_size, hd) shared page pool
+    v_pool: jax.Array,
+    cur_len: jax.Array,  # (B,) int32
+    pages: jax.Array,  # (B, n_pg) int32 page table, -1 = unmapped
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Block-paged decode attention: the SAME online-softmax body as
+    ``decode_attention_bkgd`` with block_k = page_size and the page table
+    riding the second scalar-prefetch slot.  Instead of streaming a dense
+    per-slot cache, the K/V index maps dereference ``pages[b, ik]`` so each
+    sequential grid step pulls the slot's ik-th page straight out of the
+    shared pool — no gathered copy of the cache ever materializes.  Blocks
+    past ``cur_len`` (or before the sliding window) are skipped exactly as
+    in the dense kernel; an unmapped page with in-length columns can only
+    belong to an inactive slot (allocation is a monotone prefix of the
+    sequence), whose output the server discards, so the clamped page-0
+    fetch is harmless."""
+    B, KVH, G, hd = q.shape
+    P, KVHp, page_size, hdp = k_pool.shape
+    if k_pool.shape != v_pool.shape:
+        raise ValueError(f"pool mismatch: k {k_pool.shape} v {v_pool.shape}")
+    if (KVHp, hdp) != (KVH, hd):
+        raise ValueError(f"pool {k_pool.shape} does not match q {q.shape}")
+    if pages.shape[0] != B:
+        raise ValueError(f"page table {pages.shape} does not match batch {B}")
+    n_pg = pages.shape[1]
+    if page_size % 8 != 0:
+        raise ValueError(
+            f"paged decode BlockSpec tiling: page_size={page_size} is not a "
+            f"multiple of the f32 sublane (8); pool {k_pool.shape}"
+        )
+    scale = 1.0 / math.sqrt(hd)
+
+    # pages_ref occupies the starts slot of the shared body; has_starts=False
+    # means it is only ever read by the index maps below
+    kern = functools.partial(
+        _decode_kernel,
+        scale=scale,
+        window=window,
+        softcap=softcap,
+        block_k=page_size,
+        num_k_blocks=n_pg,
+        has_starts=False,
+        skip_pad_blocks=False,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, n_pg),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ik, lens, pages: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, page_size, hd),
+                lambda b, h, ik, lens, pages: (jnp.maximum(pages[b, ik], 0), h, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, page_size, hd),
+                lambda b, h, ik, lens, pages: (jnp.maximum(pages[b, ik], 0), h, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, hd), lambda b, h, ik, lens, pages: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        compiler_params=kcfg.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lens, jnp.asarray(pages, jnp.int32), q, k_pool, v_pool)
+
+
 def starts_block_counts(
     S: int,
     cur_len,

@@ -90,6 +90,74 @@ def _xla_decode_bksd(q, k_cache, v_cache, cur_len, *, window, softcap, starts=No
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def _pool_view(pool, pages):
+    """(B, KVH, n_pg * page_size, hd) per-slot contiguous view of a paged
+    pool — unmapped (-1) table entries come out as zero rows."""
+    from repro.kernels.compaction.ops import gather_rows
+
+    P, KVH, ps, hd = pool.shape
+    B, n_pg = pages.shape
+    rows = gather_rows(pool, pages.reshape(-1))
+    return (
+        rows.reshape(B, n_pg, KVH, ps, hd)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(B, KVH, n_pg * ps, hd)
+    )
+
+
+def _xla_decode_paged(q, k_pool, v_pool, pages, cur_len, *, window, softcap):
+    """Gathered-view route: materialize each slot's (KVH, S, hd) view and
+    run the dense bksd sweep over it.  The view is exactly max_seq rows, so
+    the reduction is bitwise the dense cache's."""
+    k_view = _pool_view(k_pool, pages)
+    v_view = _pool_view(v_pool, pages)
+    return _xla_decode_bksd(
+        q, k_view, v_view, cur_len, window=window, softcap=softcap
+    )
+
+
+def decode_attention_paged(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_pool: jax.Array,  # (P, KVH, page_size, hd) shared page pool
+    v_pool: jax.Array,
+    pages: jax.Array,  # (B, n_pg) int32 page table, -1 = unmapped
+    cur_len,  # (B,) per-slot valid lengths
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention against block-paged KV pools.  On the kernel impls
+    the page table rides scalar prefetch and the pool is streamed page by
+    page (no gathered cache copy); the XLA impl gathers the per-slot view
+    and reuses the dense masked sweep."""
+    if k_pool.shape != v_pool.shape:
+        raise ValueError(f"pool mismatch: k {k_pool.shape} v {v_pool.shape}")
+    if pages.shape[0] != q.shape[0]:
+        raise ValueError(
+            f"page table {pages.shape} does not match batch {q.shape[0]}"
+        )
+    impl = kcfg.get_impl()
+    if impl == "xla":
+        return _xla_decode_paged(
+            q, k_pool, v_pool, pages, cur_len, window=window, softcap=softcap
+        )
+    B, _, H, hd = q.shape
+    KVH = k_pool.shape[1]
+    G = H // KVH
+    qk = q.reshape(B, KVH, G, hd)
+    out = _kernel.decode_attention_paged_bkgd(
+        qk,
+        k_pool,
+        v_pool,
+        jnp.asarray(cur_len, jnp.int32),
+        jnp.asarray(pages, jnp.int32),
+        window=window,
+        softcap=softcap,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out.reshape(B, 1, H, hd)
+
+
 def decode_attention_bksd(
     q: jax.Array,  # (B, 1, H, hd)
     k_cache: jax.Array,  # (B, KVH, S, hd)  kernel-native layout

@@ -40,3 +40,28 @@ def decode_attention_ref(
     p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows (pure padding)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
     return out.astype(q.dtype)
+
+
+def decode_attention_paged_ref(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_pool: jax.Array,  # (P, KVH, page_size, hd) shared page pool
+    v_pool: jax.Array,
+    pages: jax.Array,  # (B, n_pg) int32 page table, -1 = unmapped
+    cur_len,  # scalar or (B,)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Paged oracle: gather each slot's pages into a dense (B, S, KVH, hd)
+    view (unmapped entries as zero rows) and defer to the dense oracle."""
+    P, KVH, ps, hd = k_pool.shape
+    B, n_pg = pages.shape
+    safe = jnp.where(pages >= 0, pages, 0)
+    mapped = (pages >= 0)[:, :, None, None, None]
+    k = jnp.where(mapped, k_pool[safe], 0)  # (B, n_pg, KVH, ps, hd)
+    v = jnp.where(mapped, v_pool[safe], 0)
+    k_view = k.transpose(0, 1, 3, 2, 4).reshape(B, n_pg * ps, KVH, hd)
+    v_view = v.transpose(0, 1, 3, 2, 4).reshape(B, n_pg * ps, KVH, hd)
+    return decode_attention_ref(
+        q, k_view, v_view, cur_len, window=window, softcap=softcap
+    )

@@ -969,6 +969,215 @@ def prefill_into_slot(
 
 
 # ---------------------------------------------------------------------------
+# block-paged serving: KV pool + page-table decode / chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def supports_paging(cfg: ModelConfig) -> bool:
+    """Block-paged KV pools serve the attention-cache families on the
+    kernel-native layout.  Constant-state families (SSM/RWKV) have O(1)
+    per-slot state — there is nothing to page — and hybrid's per-invocation
+    KV leaves keep the dense slot layout for now."""
+    from repro.models.layers import LEGACY_DECODE
+
+    return (
+        not cfg.is_encoder
+        and not LEGACY_DECODE
+        and cfg.family in ("dense", "moe", "vlm")
+    )
+
+
+def init_paged_pool(cfg: ModelConfig, n_pages: int, page_size: int, dtype=None):
+    """Boxed paged KV pool: per leaf ``(L, n_pages, KVH, page_size, hd)``.
+
+    The page axis replaces the dense cache's (batch, seq) product — HBM is
+    bound by pages actually mapped, not slots x max_seq.  Page contents keep
+    the kernel-native (KVH, seq, hd) tile layout, so a gathered slot view is
+    bitwise the dense cache row."""
+    assert supports_paging(cfg), cfg.family
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, n_pages, cfg.n_kv_heads, page_size, cfg.head_dim)
+    axes = ("layers", None, "cache_kv_heads", "kv_seq", "head_dim")
+    return {
+        "k": Box(jnp.zeros(shape, dtype), axes),
+        "v": Box(jnp.zeros(shape, dtype), axes),
+    }
+
+
+def copy_pool_page(pool, src, dst):
+    """Device half of a copy-on-write split: copy page ``src`` to ``dst``
+    on every leaf (and every layer / tier-member plane).  The page axis is
+    located from the trailing (P, KVH, page_size, hd) layout, so the same
+    program serves engine pools and E-stacked tier pools."""
+
+    def cp(t):
+        ax = t.ndim - 4
+        row = jax.lax.dynamic_index_in_dim(t, src, ax, keepdims=True)
+        return jax.lax.dynamic_update_index_in_dim(t, row, dst, ax)
+
+    return jax.tree.map(cp, pool)
+
+
+def decode_step_paged(
+    params,
+    token,
+    pool,
+    pos,
+    pages,
+    cfg: ModelConfig,
+    *,
+    window_override=None,
+):
+    """One decode token per slot against the block-paged KV pool.
+
+    token: (B, 1) int32; pos: (B,) per-slot positions; pages: (B, n_pg)
+    int32 page table (-1 = unmapped); pool: values tree from
+    ``init_paged_pool``.  Each layer scatters the new K/V row into the
+    slot's current page and attends over the gathered page view — bitwise
+    what the dense slot cache computes (see serve/paging.py).  Returns
+    (logits (B, V), new_pool)."""
+    window = window_override if window_override is not None else cfg.sliding_window
+    assert supports_paging(cfg), cfg.family
+    x = params["embed"][token]  # (B, 1, D)
+    x = constrain(x, ("act_batch", None, "act_embed"))
+
+    if not _interleaved_moe(cfg):
+
+        def body(h, inp):
+            lp, kp, vp = inp
+            h, (kp, vp) = BD.dense_layer_decode_paged(
+                lp, h, cfg, kp, vp, pos, pages, sliding_window=window
+            )
+            return h, (kp, vp)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], pool["k"], pool["v"])
+        )
+        new_pool = {"k": k_new, "v": v_new}
+    else:
+        me = cfg.moe_every
+        n_groups = cfg.n_layers // me
+        grp_dense = jax.tree.map(
+            lambda t: t.reshape((n_groups, me - 1) + t.shape[1:]),
+            params["layers"]["dense"],
+        )
+        grp_pool = jax.tree.map(
+            lambda t: t.reshape((n_groups, me) + t.shape[1:]),
+            {"k": pool["k"], "v": pool["v"]},
+        )
+
+        def one(h, inp):
+            lp, kp, vp = inp
+            h, (kp, vp) = BD.dense_layer_decode_paged(
+                lp, h, cfg, kp, vp, pos, pages, sliding_window=window
+            )
+            return h, (kp, vp)
+
+        def body(h, inp):
+            lp_d, lp_m, pg = inp
+            h, (kd, vd) = jax.lax.scan(
+                one, h, (lp_d, pg["k"][: me - 1], pg["v"][: me - 1])
+            )
+            h, (km, vm) = BD.dense_layer_decode_paged(
+                lp_m, h, cfg, pg["k"][me - 1], pg["v"][me - 1], pos, pages,
+                sliding_window=window,
+            )
+            k_new = jnp.concatenate([kd, km[None]], axis=0)
+            v_new = jnp.concatenate([vd, vm[None]], axis=0)
+            return h, (k_new, v_new)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (grp_dense, params["layers"]["moe"], grp_pool)
+        )
+        new_pool = {
+            "k": k_new.reshape((cfg.n_layers,) + k_new.shape[2:]),
+            "v": v_new.reshape((cfg.n_layers,) + v_new.shape[2:]),
+        }
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return constrain(logits, ("act_batch", "act_vocab")), new_pool
+
+
+def prefill_into_slot_paged(
+    params,
+    tokens,
+    pool,
+    pages_row,
+    start,
+    cfg: ModelConfig,
+    *,
+    window_override=None,
+):
+    """Paged counterpart of ``prefill_into_slot``: consume a C-token chunk
+    of one slot's prompt into the pool pages its table row maps.
+
+    tokens: (C,) int32 for positions [start, start+C); pages_row: (n_pg,)
+    the slot's page-table row; start is a traced scalar.  Shared-prefix
+    admission skips chunks for the shared span, so ``start`` begins at the
+    first unshared position.  Returns the updated pool."""
+    window = window_override if window_override is not None else cfg.sliding_window
+    assert supports_paging(cfg), cfg.family
+    start = jnp.asarray(start)
+    x = params["embed"][tokens][None, :, :]  # (1, C, D)
+    x = constrain(x, ("act_batch", None, "act_embed"))
+
+    if not _interleaved_moe(cfg):
+
+        def body(h, inp):
+            lp, kp, vp = inp
+            h, (kp, vp) = BD.dense_layer_prefill_chunk_paged(
+                lp, h, cfg, kp, vp, start, pages_row, sliding_window=window
+            )
+            return h, (kp, vp)
+
+        _, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], pool["k"], pool["v"])
+        )
+        return {"k": k_new, "v": v_new}
+
+    me = cfg.moe_every
+    n_groups = cfg.n_layers // me
+    grp_dense = jax.tree.map(
+        lambda t: t.reshape((n_groups, me - 1) + t.shape[1:]),
+        params["layers"]["dense"],
+    )
+    grp_pool = jax.tree.map(
+        lambda t: t.reshape((n_groups, me) + t.shape[1:]),
+        {"k": pool["k"], "v": pool["v"]},
+    )
+
+    def one(h, inp):
+        lp, kp, vp = inp
+        h, (kp, vp) = BD.dense_layer_prefill_chunk_paged(
+            lp, h, cfg, kp, vp, start, pages_row, sliding_window=window
+        )
+        return h, (kp, vp)
+
+    def body(h, inp):
+        lp_d, lp_m, pg = inp
+        h, (kd, vd) = jax.lax.scan(
+            one, h, (lp_d, pg["k"][: me - 1], pg["v"][: me - 1])
+        )
+        h, (km, vm) = BD.dense_layer_prefill_chunk_paged(
+            lp_m, h, cfg, pg["k"][me - 1], pg["v"][me - 1], start, pages_row,
+            sliding_window=window,
+        )
+        k_new = jnp.concatenate([kd, km[None]], axis=0)
+        v_new = jnp.concatenate([vd, vm[None]], axis=0)
+        return h, (k_new, v_new)
+
+    _, (k_new, v_new) = jax.lax.scan(
+        body, x, (grp_dense, params["layers"]["moe"], grp_pool)
+    )
+    return {
+        "k": k_new.reshape((cfg.n_layers,) + k_new.shape[2:]),
+        "v": v_new.reshape((cfg.n_layers,) + v_new.shape[2:]),
+    }
+
+
+# ---------------------------------------------------------------------------
 # inputs: ShapeDtypeStruct specs (dry-run) and concrete arrays (smoke)
 # ---------------------------------------------------------------------------
 

@@ -86,6 +86,69 @@ def dense_layer_prefill_chunk(
     return x + h, caches
 
 
+def dense_layer_prefill_chunk_paged(
+    p,
+    x,
+    cfg: ModelConfig,
+    k_pool,
+    v_pool,
+    start,
+    pages_row,
+    *,
+    sliding_window: Optional[int] = None,
+):
+    """Chunked-prefill for one slot against block-paged pools.  x: (1, C, D);
+    pools are (P, KVH, page_size, hd); ``pages_row`` the slot's (n_pg,)
+    page-table row.  Returns (x, (k_pool, v_pool))."""
+    h, pools = L.attention_prefill_chunk_paged(
+        p["attn"],
+        L.apply_norm(p["ln1"], x, cfg),
+        cfg,
+        k_pool,
+        v_pool,
+        start,
+        pages_row,
+        sliding_window=sliding_window,
+    )
+    x = x + h
+    if "moe" in p:
+        h, _ = L.apply_moe(p["moe"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    else:
+        h = L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    return x + h, pools
+
+
+def dense_layer_decode_paged(
+    p,
+    x,
+    cfg: ModelConfig,
+    k_pool,
+    v_pool,
+    cur_index,
+    pages,
+    *,
+    sliding_window: Optional[int] = None,
+):
+    """Single-token decode against block-paged pools.  x: (B, 1, D);
+    ``pages`` the (B, n_pg) page table.  Returns (x, (k_pool, v_pool))."""
+    h, pools = L.attention_decode_paged(
+        p["attn"],
+        L.apply_norm(p["ln1"], x, cfg),
+        cfg,
+        k_pool,
+        v_pool,
+        cur_index,
+        pages,
+        sliding_window=sliding_window,
+    )
+    x = x + h
+    if "moe" in p:
+        h, _ = L.apply_moe(p["moe"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    else:
+        h = L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    return x + h, pools
+
+
 def dense_layer_decode(
     p,
     x,

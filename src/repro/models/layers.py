@@ -288,7 +288,6 @@ def attention_prefill_chunk(
     from a slot's previous occupant stay invisible).  Returns
     (out (1, C, D), (k_cache, v_cache))."""
     B, C, _ = x.shape
-    S = k_cache.shape[2]
     start = jnp.asarray(start)
     positions = start + jnp.arange(C)[None, :]  # (1, C) absolute positions
     q, k, v = qkv_project(p, x, cfg, positions, use_rope=use_rope)
@@ -298,12 +297,23 @@ def attention_prefill_chunk(
     v_cache = jax.lax.dynamic_update_slice(
         v_cache, v.transpose(0, 2, 1, 3).astype(v_cache.dtype), (0, 0, start, 0)
     )
-    KVH = k_cache.shape[1]
+    ctx = _chunk_attend(q, k_cache, v_cache, positions, cfg, sliding_window)
+    return attn_output(p, ctx, cfg), (k_cache, v_cache)
+
+
+def _chunk_attend(q, k_view, v_view, positions, cfg: ModelConfig, sliding_window):
+    """Masked-softmax chunk attention over a (B, KVH, S, hd) cache view —
+    the one implementation behind BOTH the dense and the paged chunk
+    prefill, which is what makes their outputs bitwise identical: masked
+    lanes are pinned to -1e30 so their softmax weight underflows to exactly
+    0.0, hiding stale dense rows and unmapped paged rows the same way."""
+    B, C = q.shape[0], q.shape[1]
+    KVH, S = k_view.shape[1], k_view.shape[2]
     H, hd = q.shape[2], q.shape[3]
     G = H // KVH
     scale = 1.0 / math.sqrt(hd)
     qg = q.reshape(B, C, KVH, G, hd).astype(jnp.float32) * scale
-    s = jnp.einsum("bckgd,bksd->bkgcs", qg, k_cache.astype(jnp.float32))
+    s = jnp.einsum("bckgd,bksd->bkgcs", qg, k_view.astype(jnp.float32))
     if cfg.attn_logit_softcap is not None:
         s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
     cols = jnp.arange(S)[None, :]  # (1, S)
@@ -313,9 +323,107 @@ def attention_prefill_chunk(
         mask &= cols > rows - sliding_window
     s = jnp.where(mask[None, None, None, :, :], s, -1e30)
     pr = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bkgcs,bksd->bckgd", pr, v_cache.astype(jnp.float32))
-    ctx = ctx.reshape(B, C, H, hd).astype(q.dtype)
-    return attn_output(p, ctx, cfg), (k_cache, v_cache)
+    ctx = jnp.einsum("bkgcs,bksd->bckgd", pr, v_view.astype(jnp.float32))
+    return ctx.reshape(B, C, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block-paged attention (serve/paging.py owns the table; see DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def paged_view(pool, pages):
+    """Gather per-slot contiguous cache views out of a paged pool.
+
+    pool: (P, KVH, page_size, hd); pages: (B, n_pg) int32 page table, -1 =
+    unmapped (gathers as zero rows).  Returns (B, KVH, n_pg * page_size, hd)
+    — by construction exactly the dense cache's (B, KVH, S, hd)."""
+    from repro.kernels.compaction.ops import gather_rows
+
+    P, KVH, ps, hd = pool.shape
+    B, n_pg = pages.shape
+    rows = gather_rows(pool, pages.reshape(-1))  # (B * n_pg, KVH, ps, hd)
+    return (
+        rows.reshape(B, n_pg, KVH, ps, hd)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(B, KVH, n_pg * ps, hd)
+    )
+
+
+def attention_decode_paged(
+    p,
+    x,
+    cfg: ModelConfig,
+    k_pool,
+    v_pool,
+    cur_index,
+    pages,
+    *,
+    use_rope: bool = True,
+    sliding_window: Optional[int] = None,
+):
+    """Single-token decode against a block-paged KV pool.
+
+    Pools are (P, KVH, page_size, hd); ``pages`` (B, n_pg) maps each slot's
+    sequence spans onto pool pages.  The new K/V row scatters into the
+    slot's current page (an unmapped row lands on the overflow sink — the
+    last pool page, reserved by the allocator); attention runs over the
+    page-gathered view, which is bitwise the dense slot cache.  Per-slot
+    (B,) positions only — paging exists for continuous batching.
+    Returns (out, (k_pool, v_pool))."""
+    from repro.kernels.decode_attention import ops as dec_ops
+
+    cur_index = jnp.asarray(cur_index)
+    assert cur_index.ndim == 1, "paged decode takes per-slot (B,) positions"
+    ps = k_pool.shape[2]
+    positions = cur_index[:, None]
+    q, k, v = qkv_project(p, x, cfg, positions, use_rope=use_rope)
+    pg = jnp.take_along_axis(pages, (cur_index // ps)[:, None], axis=1)[:, 0]
+    pg = jnp.where(pg >= 0, pg, k_pool.shape[0] - 1)  # overflow sink
+    off = cur_index % ps
+    k_pool = k_pool.at[pg, :, off, :].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[pg, :, off, :].set(v[:, 0].astype(v_pool.dtype))
+    ctx = dec_ops.decode_attention_paged(
+        q, k_pool, v_pool, pages, cur_len=cur_index + 1,
+        window=sliding_window, softcap=cfg.attn_logit_softcap,
+    )
+    return attn_output(p, ctx, cfg), (k_pool, v_pool)
+
+
+def attention_prefill_chunk_paged(
+    p,
+    x,
+    cfg: ModelConfig,
+    k_pool,
+    v_pool,
+    start,
+    pages_row,
+    *,
+    use_rope: bool = True,
+    sliding_window: Optional[int] = None,
+):
+    """Chunked-prefill attention for one slot against the paged pool.
+
+    x: (1, C, D); pages_row: (n_pg,) the slot's page-table row.  The
+    chunk's K/V rows scatter into the mapped pages at their in-page
+    offsets, then the chunk attends over the slot's gathered view through
+    the SAME ``_chunk_attend`` as the dense path — token-for-token and
+    bitwise what the dense slot row computes.  Returns
+    (out (1, C, D), (k_pool, v_pool))."""
+    B, C, _ = x.shape
+    ps = k_pool.shape[2]
+    start = jnp.asarray(start)
+    positions = start + jnp.arange(C)[None, :]  # (1, C)
+    q, k, v = qkv_project(p, x, cfg, positions, use_rope=use_rope)
+    pg = pages_row[positions[0] // ps]  # (C,)
+    pg = jnp.where(pg >= 0, pg, k_pool.shape[0] - 1)  # overflow sink
+    off = positions[0] % ps
+    k_pool = k_pool.at[pg, :, off, :].set(k[0].astype(k_pool.dtype))
+    v_pool = v_pool.at[pg, :, off, :].set(v[0].astype(v_pool.dtype))
+    k_view = paged_view(k_pool, pages_row[None])  # (1, KVH, S, hd)
+    v_view = paged_view(v_pool, pages_row[None])
+    ctx = _chunk_attend(q, k_view, v_view, positions, cfg, sliding_window)
+    return attn_output(p, ctx, cfg), (k_pool, v_pool)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,6 @@
 from repro.serve.batching import Request, RequestQueue
 from repro.serve.engine import ServingEngine
+from repro.serve.paging import PagePool
 from repro.serve.slot_stream import EngineBackend, SlotStream, TierBackend
 from repro.serve.cascade_server import CascadeServer, CascadeTier
 from repro.serve.placement import (
@@ -27,6 +28,7 @@ __all__ = [
     "SlotStream",
     "EngineBackend",
     "TierBackend",
+    "PagePool",
     "CascadeServer",
     "CascadeTier",
     "Host",

@@ -93,6 +93,34 @@ def digest_generations(out: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _slot_sampler(temperature: float):
+    """Per-slot, per-position, per-member sampling for continuous batching:
+    token = categorical(fold_in(fold_in(slot_key, pos), e)).  The slot's
+    key is set once at admission, so a slot's sampled trajectory is a pure
+    function of its occupant and position — bitwise invariant to which
+    other slots share its decode dispatches (serial, blocking, or
+    overlapped transport all see the same votes).  Greedy tiers argmax."""
+
+    def sample(logits, slot_keys, pos):  # (E, B, V), (B, 2), (B,)
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        E = logits.shape[0]
+
+        def one(key, p, ls):  # (2,), (), (E, V)
+            kp = jax.random.fold_in(key, p)
+            return jax.vmap(
+                lambda e, l: jax.random.categorical(
+                    jax.random.fold_in(kp, e), l / temperature
+                )
+            )(jnp.arange(E), ls)
+
+        return jax.vmap(one, in_axes=(0, 0, 1), out_axes=1)(
+            slot_keys, pos, logits
+        ).astype(jnp.int32)
+
+    return sample
+
+
 @functools.lru_cache(maxsize=None)
 def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
     """Long-lived jitted ensemble programs for one (config, temperature).
@@ -100,10 +128,15 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
     ``last_logits(values, batch) -> (E, B, V)``
     ``prefill(values, batch, rng) -> (tok (E, B, 1), caches, rng)``
     ``decode(values, tok, caches, pos, rng) -> (tok (E, B, 1), caches, rng)``
+    ``decode_slots(values, tok, caches, pos, slot_keys) -> (tok, caches)``
 
     Sampling lives inside the programs (one XLA program advances every
-    member of the tier per step); ``pos`` may be a scalar (batch mode) or a
-    per-slot (B,) vector (continuous mode) — each shape traces once.
+    member of the tier per step).  Batch mode (``decode``, scalar ``pos``)
+    threads one rng chain — every row steps in lockstep, so the chain is
+    deterministic.  Continuous mode (``decode_slots``, per-slot (B,) pos)
+    samples from per-slot admission keys instead (``_slot_sampler``): slots
+    advance independently, and a shared chain would make votes depend on
+    slot-step interleaving.
     """
 
     def _sample(logits, rng):  # logits (E, B, V)
@@ -116,6 +149,8 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
         )(keys, logits)
         return tok.astype(jnp.int32), rng
 
+    sample_slots = _slot_sampler(temperature)
+
     def prefill(values, batch, rng):
         logits, caches = ens.ensemble_prefill(values, batch, cfg)
         tok, rng = _sample(logits, rng)
@@ -125,6 +160,11 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
         logits, caches = ens.ensemble_decode_step(values, tok, caches, pos, cfg)
         nxt, rng = _sample(logits, rng)
         return nxt[..., None], caches, rng
+
+    def decode_slots(values, tok, caches, pos, slot_keys):
+        logits, caches = ens.ensemble_decode_step(values, tok, caches, pos, cfg)
+        nxt = sample_slots(logits, slot_keys, pos)
+        return nxt[..., None], caches
 
     def prefill_chunk(values, caches, tokens, slot, start):
         return jax.vmap(
@@ -144,6 +184,7 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
         ),
         prefill=jax.jit(_counted(f"{key}/ens_prefill", prefill)),
         decode=jax.jit(_counted(f"{key}/ens_decode", decode)),
+        decode_slots=jax.jit(_counted(f"{key}/ens_decode_slots", decode_slots)),
         prefill_chunk=(
             jax.jit(_counted(f"{key}/ens_prefill_chunk", prefill_chunk))
             if api.supports_chunked_prefill(cfg)
@@ -153,6 +194,44 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
             jax.jit(_counted(f"{key}/ens_slot_reset", reset_slot))
             if api.has_slot_state(cfg)
             else None
+        ),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def tier_paged_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
+    """Block-paged counterparts of ``tier_programs``'s continuous-mode
+    programs: E pool planes advance under ONE shared page table (members
+    score the same tokens at the same positions), with per-slot admission
+    keys for sampling.  Pool/table geometry is data shape, not static args
+    — one trace per geometry."""
+    assert api.supports_paging(cfg), cfg.family
+    sample_slots = _slot_sampler(temperature)
+
+    def decode_slots(values, tok, pools, pos, pages, slot_keys):
+        logits, pools = jax.vmap(
+            lambda v, t, pl: api.decode_step_paged(v, t, pl, pos, pages, cfg)
+        )(values, tok, pools)
+        nxt = sample_slots(logits, slot_keys, pos)
+        return nxt[..., None], pools
+
+    def prefill_chunk(values, pools, tokens, pages_row, start):
+        return jax.vmap(
+            lambda v, pl: api.prefill_into_slot_paged(
+                v, tokens, pl, pages_row, start, cfg
+            )
+        )(values, pools)
+
+    key = f"{cfg.name}@T{temperature:g}"
+    return SimpleNamespace(
+        decode_slots=jax.jit(
+            _counted(f"{key}/ens_decode_paged", decode_slots)
+        ),
+        prefill_chunk=jax.jit(
+            _counted(f"{key}/ens_prefill_chunk_paged", prefill_chunk)
+        ),
+        copy_page=jax.jit(
+            _counted(f"{key}/ens_copy_pool_page", api.copy_pool_page)
         ),
     )
 
@@ -176,6 +255,7 @@ class CascadeTier:
         self._last_logits = programs.last_logits
         self._prefill = programs.prefill
         self._decode = programs.decode
+        self._decode_slots = programs.decode_slots
         self._prefill_chunk = programs.prefill_chunk
         self._reset_slot = programs.reset_slot
 
@@ -305,6 +385,9 @@ class CascadeServer:
         max_seq: int = 256,
         seed: int = 0,
         chunked_prefill: bool = True,
+        paged=None,
+        page_size: int = 16,
+        n_pages=None,
     ) -> List[Request]:
         """Continuous-batching generate mode: every tier runs a
         ``SlotStream`` (serve/slot_stream.py, the E=k instantiation of the
@@ -325,10 +408,12 @@ class CascadeServer:
         every runnable stream — with an ``AsyncTransport`` link the edge
         tier therefore keeps admitting and decoding while deferral payloads
         are on the wire (DESIGN.md §8).  The loop blocks on a handle only
-        when NO stream has runnable work (the all-idle fallback).  Greedy
-        (temperature-0) tiers generate bitwise-identically whether the link
-        overlaps, blocks, or is absent — delivery timing only moves WHEN a
-        request is re-admitted, never what its slot computes."""
+        when NO stream has runnable work (the all-idle fallback).  Tiers
+        generate bitwise-identically whether the link overlaps, blocks, or
+        is absent — at ANY temperature: delivery timing only moves WHEN a
+        request is re-admitted, never what its slot computes (greedy slots
+        are rng-free; sampled slots draw from per-slot admission keys —
+        see ``_slot_sampler``)."""
         for r in requests:
             assert len(r.tokens) + r.max_new_tokens <= max_seq, (
                 f"request {r.rid}: prompt+budget "
@@ -336,7 +421,10 @@ class CascadeServer:
             )
         streams = [
             SlotStream(
-                TierBackend(t, n_slots=n_slots, max_seq=max_seq, seed=seed + i),
+                TierBackend(
+                    t, n_slots=n_slots, max_seq=max_seq, seed=seed + i,
+                    paged=paged, page_size=page_size, n_pages=n_pages,
+                ),
                 n_slots=n_slots, max_seq=max_seq,
                 chunked_prefill=chunked_prefill,
             )

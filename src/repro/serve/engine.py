@@ -113,6 +113,35 @@ def model_programs(cfg: ModelConfig) -> SimpleNamespace:
     )
 
 
+@functools.lru_cache(maxsize=None)
+def paged_model_programs(cfg: ModelConfig) -> SimpleNamespace:
+    """Long-lived jitted block-paged serving programs for one config
+    (families where ``api.supports_paging``): page-table decode, paged
+    chunked prefill, and the copy-on-write page copy.  Page size and pool
+    size are DATA shapes, not static arguments — a given (pool, table)
+    geometry traces once and every allocator decision after that is just
+    different int32 table contents."""
+    assert api.supports_paging(cfg), cfg.family
+    decode = jax.jit(
+        _counted(
+            f"{cfg.name}/decode_paged",
+            functools.partial(api.decode_step_paged, cfg=cfg),
+        )
+    )
+    prefill_chunk = jax.jit(
+        _counted(
+            f"{cfg.name}/prefill_chunk_paged",
+            functools.partial(api.prefill_into_slot_paged, cfg=cfg),
+        )
+    )
+    copy_page = jax.jit(
+        _counted(f"{cfg.name}/copy_pool_page", api.copy_pool_page)
+    )
+    return SimpleNamespace(
+        decode=decode, prefill_chunk=prefill_chunk, copy_page=copy_page
+    )
+
+
 def grow_cache(cache, pad: int, cfg: ModelConfig, *, lead: int = 0):
     """Pad the sequence axis of an attention KV cache by ``pad`` positions.
 
@@ -232,10 +261,16 @@ class ServingEngine:
         max_seq: Optional[int] = None,
         chunked_prefill: bool = True,
         max_chunk: int = 256,
+        paged: Optional[bool] = None,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
     ):
         """A fresh ``SlotStream`` (serve/slot_stream.py) over this engine's
         compile-once programs — the E=1 instantiation of the shared slot
-        state machine."""
+        state machine.  ``paged`` selects block-paged KV pools (default:
+        wherever the family supports them; ``paged=False`` keeps the dense
+        slot cache as the parity oracle); ``n_pages`` bounds pool HBM
+        (default: dense-equivalent capacity plus the overflow sink)."""
         from repro.serve.slot_stream import EngineBackend, SlotStream
 
         if max_seq is None:
@@ -243,6 +278,7 @@ class ServingEngine:
         backend = EngineBackend(
             self.cfg, self.params, model_programs(self.cfg), self._sample,
             n_slots=n_slots, max_seq=max_seq, stats=self.stats,
+            paged=paged, page_size=page_size, n_pages=n_pages,
         )
         return SlotStream(
             backend, n_slots=n_slots, max_seq=max_seq,
@@ -256,6 +292,9 @@ class ServingEngine:
         n_slots: int = 8,
         max_seq: Optional[int] = None,
         chunked_prefill: bool = True,
+        paged: Optional[bool] = None,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
     ) -> List[Request]:
         """Slot-based continuous batching: a thin driver over ``SlotStream``
         (the E=1 case of the shared slot state machine).  One decode step
@@ -269,7 +308,8 @@ class ServingEngine:
         wall (``pos >= max_seq - 1``) come back with ``truncated=True``.
         Returns the completed requests."""
         stream = self.slot_stream(
-            n_slots=n_slots, max_seq=max_seq, chunked_prefill=chunked_prefill
+            n_slots=n_slots, max_seq=max_seq, chunked_prefill=chunked_prefill,
+            paged=paged, page_size=page_size, n_pages=n_pages,
         )
         stream.submit(requests)
         done: List[Request] = []

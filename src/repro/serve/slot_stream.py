@@ -48,9 +48,31 @@ Device work goes through a small backend protocol (duck-typed):
     prefill_chunk(tokens (C,), slot, start)     -> None   (updates cache)
     reset_slot(slot)                            -> None   (zero state leaves)
 
+plus three OPTIONAL hooks for backends whose slot memory is allocated
+rather than dedicated (the block-paged KV pools — serve/paging.py):
+
+    begin_slot(slot, tokens, share) -> Optional[int]
+        claim slot memory for a prompt before any prefill; returns the
+        number of leading prompt tokens already covered by shared prefix
+        pages (0 for dense), or None when the pool cannot admit — the
+        request stays queued and the slot stays free.  Subsumes
+        ``reset_slot``.  ``share`` is the stream's chunked flag: prefix
+        pages may only be published when chunked prefill writes them in
+        full before any sharer can be admitted.
+    release_slot(slot) -> None
+        return the slot's memory (decref pages) on completion.
+    prepare_step(pos, active) -> [slot, ...]
+        make each active slot's next write position mapped (grow-by-page,
+        copy-on-write); returns the slots the pool could NOT serve — the
+        stream force-completes those with ``truncated=True`` (the paged
+        analogue of the dense cache wall).
+
 ``EngineBackend`` (E=1, host-side sampling via the engine's rng) and
 ``TierBackend`` (ensemble programs with in-program sampling) are provided
-here; both reuse the module-level compile-once program caches.
+here; both reuse the module-level compile-once program caches, and both
+default to block-paged pools where ``api.supports_paging`` allows, keeping
+the dense slot cache available behind ``paged=False`` as the bitwise
+parity oracle.
 """
 from __future__ import annotations
 
@@ -99,8 +121,11 @@ class SlotStream:
         self.steps = 0
         self.stats = {
             "admitted": 0,
+            "admit_failures": 0,  # begin_slot refusals (pool exhausted)
+            "forced_completions": 0,  # slots cut short by pool exhaustion
             "chunk_calls": 0,
             "chunk_tokens": 0,
+            "shared_tokens": 0,  # prompt tokens served from shared pages
             "decode_tokens": 0,  # active slot-steps through the decode program
             # host wall time inside admission / decode dispatch.  jax
             # dispatch is async, so these measure enqueue overhead, not
@@ -166,26 +191,58 @@ class SlotStream:
             landed += 1
         return landed
 
+    def _release(self, s: int):
+        """Hand the slot's memory back to the backend (paged pools decref
+        their pages; dense backends have nothing to return)."""
+        release = getattr(self.backend, "release_slot", None)
+        if release is not None:
+            release(s)
+        self.slot_req[s] = None
+        self.slot_emitted[s] = []
+
     def _admit(self, s: int):
         if not self.queue:
             self.slot_req[s] = None
             return
-        r = self.queue.popleft()
+        r = self.queue[0]  # peek: admission may be refused by the pool
         t0 = time.perf_counter()
-        self.backend.reset_slot(s)
+        begin = getattr(self.backend, "begin_slot", None)
+        if begin is not None:
+            # prefix pages are only shareable under chunked prefill (the
+            # owner writes them in full before any sharer can be admitted)
+            shared = begin(s, r.tokens, share=self.chunked)
+            if shared is None:
+                # pool exhausted: the request stays at the queue head and
+                # the slot stays free; completions will release pages
+                self.stats["admit_failures"] += 1
+                self.slot_req[s] = None
+                if not any(q is not None for q in self.slot_req):
+                    raise RuntimeError(
+                        f"request {r.rid}: prompt needs more pages than the "
+                        "pool holds even with every slot free"
+                    )
+                return
+        else:
+            self.backend.reset_slot(s)
+            shared = 0
+        self.queue.popleft()
         consumed = 0
         if self.chunked and len(r.tokens) > 1:
             # consume prompt[:-1] in bucketed pow2 chunks; the last prompt
-            # token rides the decode program (see module docstring)
+            # token rides the decode program (see module docstring).  A
+            # shared-prefix span is already resident in the pool — chunks
+            # start at its end (absolute positions, so the chunk split
+            # never changes what any token computes)
             m = len(r.tokens) - 1
-            chunks = prompt_chunks(m, self.max_chunk)
-            off = 0
+            chunks = prompt_chunks(m - shared, self.max_chunk)
+            off = shared
             for c in chunks:
                 self.backend.prefill_chunk(r.tokens[off : off + c], s, off)
                 off += c
             consumed = off
             self.stats["chunk_calls"] += len(chunks)
-            self.stats["chunk_tokens"] += m
+            self.stats["chunk_tokens"] += m - shared
+            self.stats["shared_tokens"] += shared
         self.slot_req[s] = r
         self.slot_consumed[s] = consumed + 1
         self.slot_emitted[s] = []
@@ -229,12 +286,33 @@ class SlotStream:
         n_active = sum(r is not None for r in self.slot_req)
         if n_active == 0:
             return []
+        completed = []
+        prepare = getattr(self.backend, "prepare_step", None)
+        if prepare is not None:
+            # paged pools: map every active slot's next write position
+            # (grow-by-page / COW).  Slots the pool cannot serve force-
+            # complete with what they have — the paged cache wall
+            active = [s for s, r in enumerate(self.slot_req) if r is not None]
+            for s in prepare(self.pos, active):
+                r = self.slot_req[s]
+                r.truncated = True
+                gen = (
+                    np.stack(self.slot_emitted[s], axis=1)
+                    if self.slot_emitted[s]
+                    else np.zeros((self.backend.E, 0), np.int32)
+                )
+                completed.append((r, gen))
+                self.stats["forced_completions"] += 1
+                self._release(s)
+                self._admit(s)
+            n_active = sum(r is not None for r in self.slot_req)
+            if n_active == 0:
+                return completed
         t0 = time.perf_counter()
         nxt = self.backend.decode(self.tok, self.pos)  # (E, n_slots)
         self.stats["decode_time"] += time.perf_counter() - t0
         self.stats["decode_tokens"] += n_active
         self.steps += 1
-        completed = []
         for s, r in enumerate(self.slot_req):
             if r is None:
                 continue
@@ -256,6 +334,7 @@ class SlotStream:
                         else np.zeros((self.backend.E, 0), np.int32)
                     )
                     completed.append((r, gen))
+                    self._release(s)
                     self._admit(s)
         return completed
 
@@ -276,15 +355,70 @@ class SlotStream:
 # ---------------------------------------------------------------------------
 
 
-class EngineBackend:
+def _default_n_pages(n_slots: int, max_seq: int, page_size: int) -> int:
+    """Dense-equivalent pool capacity plus the overflow sink: enough pages
+    that no admission pattern the dense cache serves can ever fail."""
+    return n_slots * (max_seq // page_size) + 1
+
+
+class _PagedSlots:
+    """The shared paged-backend half: host ``PagePool`` bookkeeping plus
+    the begin/release/prepare hooks, parameterized over the device-side
+    page-copy program (engine pools and E-stacked tier pools differ only
+    in leading axes — ``api.copy_pool_page`` locates the page axis from
+    the trailing layout)."""
+
+    def _init_pool(self, n_slots, max_seq, page_size, n_pages):
+        from repro.serve.paging import PagePool
+
+        if n_pages is None:
+            n_pages = _default_n_pages(n_slots, max_seq, page_size)
+        self.pool = PagePool(
+            n_pages, page_size, n_slots=n_slots, max_seq=max_seq
+        )
+
+    def begin_slot(self, slot, tokens, *, share=True):
+        """Claim pages for a new occupant (see ``PagePool.admit``); dense
+        backends fall back to ``reset_slot`` + private rows."""
+        if not self.paged:
+            self.reset_slot(slot)
+            return 0
+        return self.pool.admit(slot, tokens, share=share)
+
+    def release_slot(self, slot):
+        if self.paged:
+            self.pool.release(slot)
+
+    def prepare_step(self, pos, active):
+        """Map each active slot's next write position; COW splits run the
+        jitted page-copy program.  Returns slots the pool cannot serve."""
+        if not self.paged:
+            return []
+        oom = []
+        for s in active:
+            # abclint: disable=ABC202(self.pos is host numpy maintained by the stream loop)
+            ok, copies = self.pool.prepare(s, int(pos[s]))
+            if not ok:
+                oom.append(s)
+                continue
+            for src, dst in copies:
+                self.pool_dev = self._copy_page(
+                    self.pool_dev, jnp.int32(src), jnp.int32(dst)
+                )
+        return oom
+
+
+class EngineBackend(_PagedSlots):
     """E=1 backend over a single model's compile-once programs.
 
     ``programs`` is the ``model_programs(cfg)`` namespace (decode /
     prefill_chunk / reset_slot); sampling stays on the host through
-    ``sample`` (the engine's temperature + rng policy)."""
+    ``sample`` (the engine's temperature + rng policy).  ``paged`` selects
+    block-paged KV pools (default wherever the family supports them);
+    ``paged=False`` keeps the dense slot cache as the parity oracle."""
 
     def __init__(self, cfg, params, programs, sample, *, n_slots, max_seq,
-                 stats=None):
+                 stats=None, paged=None, page_size: int = 16, n_pages=None):
         assert not cfg.is_encoder
         self.cfg = cfg
         self.params = params
@@ -294,23 +428,51 @@ class EngineBackend:
         self._sample = sample
         self._stats = stats
         self.E = 1
-        self.cache, _ = unbox(api.init_cache(cfg, n_slots, max_seq))
-        self.supports_chunked_prefill = self._chunk is not None
+        self.paged = api.supports_paging(cfg) if paged is None else bool(paged)
+        if self.paged:
+            from repro.serve.engine import paged_model_programs
+
+            self._init_pool(n_slots, max_seq, page_size, n_pages)
+            self.pool_dev, _ = unbox(
+                api.init_paged_pool(cfg, self.pool.n_pages, page_size)
+            )
+            progs = paged_model_programs(cfg)
+            self._decode_paged = progs.decode
+            self._chunk_paged = progs.prefill_chunk
+            self._copy_page = progs.copy_page
+            self.cache = None
+            self.supports_chunked_prefill = True
+        else:
+            # abclint: disable=ABC501(dense parity oracle: paged=False keeps the dense slot cache)
+            self.cache, _ = unbox(api.init_cache(cfg, n_slots, max_seq))
+            self.supports_chunked_prefill = self._chunk is not None
 
     def decode(self, tok, pos):
         """One decode step for every slot at its own ``pos``; returns the
         sampled next tokens (1, n_slots)."""
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tok[0]), self.cache, jnp.asarray(pos)
-        )
+        if self.paged:
+            logits, self.pool_dev = self._decode_paged(
+                self.params, jnp.asarray(tok[0]), self.pool_dev,
+                jnp.asarray(pos), jnp.asarray(self.pool.table),
+            )
+        else:
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tok[0]), self.cache, jnp.asarray(pos)
+            )
         return host_fetch(self._sample(logits))[None]  # (1, n_slots)
 
     def prefill_chunk(self, tokens, slot, start):
         """Write one pow2 prompt chunk into ``slot`` at offset ``start``."""
-        self.cache = self._chunk(
-            self.params, jnp.asarray(tokens), self.cache,
-            jnp.int32(slot), jnp.int32(start),
-        )
+        if self.paged:
+            self.pool_dev = self._chunk_paged(
+                self.params, jnp.asarray(tokens), self.pool_dev,
+                jnp.asarray(self.pool.table[slot]), jnp.int32(start),
+            )
+        else:
+            self.cache = self._chunk(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.int32(slot), jnp.int32(start),
+            )
         if self._stats is not None:
             self._stats["prefill_tokens"] += len(tokens)
 
@@ -321,41 +483,103 @@ class EngineBackend:
             self.cache = self._reset(self.cache, jnp.int32(slot))
 
 
-class TierBackend:
+class TierBackend(_PagedSlots):
     """E=k backend over a cascade tier's stacked-ensemble programs (one
     vmapped XLA program advances every member; sampling lives inside the
-    programs with the tier's rng threading)."""
+    programs).
 
-    def __init__(self, tier, *, n_slots, max_seq, seed: int = 0):
+    Sampling determinism: every slot owns an rng key ``fold_in(base,
+    admit_seq)`` assigned at admission (admission order is FIFO and
+    transport-timing-invariant), and each sampled token uses
+    ``fold_in(fold_in(slot_key, pos), e)`` — a slot's sampled trajectory
+    depends only on its own occupant and history, never on which OTHER
+    slots happen to share its decode dispatches.  Temperature>0 voting is
+    therefore bitwise identical under serial, blocking, or overlapped
+    transport (the old shared rng thread made it interleaving-dependent).
+
+    Paged tiers stack E pool planes but keep ONE page table: members score
+    the same tokens at the same positions, so every shared prefix page is
+    an E-fold HBM saving (the ABC-specific win — see DESIGN.md §10)."""
+
+    def __init__(self, tier, *, n_slots, max_seq, seed: int = 0,
+                 paged=None, page_size: int = 16, n_pages=None):
         assert not tier.cfg.is_encoder
         self.tier = tier
         self.E = tier.k
-        self.rng = jax.random.PRNGKey(seed)
-        values0, _ = unbox(api.init_cache(tier.cfg, n_slots, max_seq))
-        self.caches = jax.tree.map(
-            lambda v: jnp.zeros((self.E,) + v.shape, v.dtype), values0
+        self._base_key = jax.random.PRNGKey(seed)
+        self._admit_seq = 0
+        self.slot_keys = jnp.tile(self._base_key[None], (n_slots, 1))
+        self.paged = (
+            api.supports_paging(tier.cfg) if paged is None else bool(paged)
         )
-        self.supports_chunked_prefill = (
-            getattr(tier, "_prefill_chunk", None) is not None
+        if self.paged:
+            from repro.serve.cascade_server import tier_paged_programs
+
+            self._init_pool(n_slots, max_seq, page_size, n_pages)
+            pool0, _ = unbox(
+                api.init_paged_pool(tier.cfg, self.pool.n_pages, page_size)
+            )
+            # E pool planes, ONE table: HBM scales with pages, not seqs
+            self.pool_dev = jax.tree.map(
+                # abclint: disable=ABC502(page-bounded pool planes scale with mapped pages, not sequence length)
+                lambda v: jnp.zeros((self.E,) + v.shape, v.dtype), pool0
+            )
+            progs = tier_paged_programs(tier.cfg, float(tier.temperature))
+            self._decode_paged = progs.decode_slots
+            self._chunk_paged = progs.prefill_chunk
+            self._copy_page = progs.copy_page
+            self.caches = None
+            self.supports_chunked_prefill = True
+        else:
+            # abclint: disable=ABC501(dense parity oracle: paged=False keeps the dense slot cache)
+            values0, _ = unbox(api.init_cache(tier.cfg, n_slots, max_seq))
+            self.caches = jax.tree.map(
+                # abclint: disable=ABC502(dense parity oracle: paged=False keeps the E-stacked dense cache)
+                lambda v: jnp.zeros((self.E,) + v.shape, v.dtype), values0
+            )
+            self.supports_chunked_prefill = (
+                getattr(tier, "_prefill_chunk", None) is not None
+            )
+
+    def begin_slot(self, slot, tokens, *, share=True):
+        """Assign the slot's admission rng key, then claim its memory."""
+        shared = super().begin_slot(slot, tokens, share=share)
+        if shared is None:
+            return None  # pool refusal: the occupant (and its key) stays out
+        self._admit_seq += 1
+        self.slot_keys = self.slot_keys.at[slot].set(
+            jax.random.fold_in(self._base_key, self._admit_seq)
         )
+        return shared
 
     def decode(self, tok, pos):
         """One vmapped decode step for every member x slot; returns the
-        sampled next tokens (E, n_slots).  The shared rng thread is why
-        sampled (temperature>0) voting is timing-sensitive — see
-        DESIGN.md §8 on why overlap equivalence is a greedy-only claim."""
-        t, self.caches, self.rng = self.tier._decode(
-            self.tier.values, jnp.asarray(tok), self.caches,
-            jnp.asarray(pos), self.rng,
-        )
+        sampled next tokens (E, n_slots)."""
+        if self.paged:
+            t, self.pool_dev = self._decode_paged(
+                self.tier.values, jnp.asarray(tok), self.pool_dev,
+                jnp.asarray(pos), jnp.asarray(self.pool.table),
+                self.slot_keys,
+            )
+        else:
+            t, self.caches = self.tier._decode_slots(
+                self.tier.values, jnp.asarray(tok), self.caches,
+                jnp.asarray(pos), self.slot_keys,
+            )
         return host_fetch(t)[..., 0]  # (E, n_slots)
 
     def prefill_chunk(self, tokens, slot, start):
         """Write one pow2 prompt chunk into every member's ``slot``."""
-        self.caches = self.tier._prefill_chunk(
-            self.tier.values, self.caches, jnp.asarray(tokens),
-            jnp.int32(slot), jnp.int32(start),
-        )
+        if self.paged:
+            self.pool_dev = self._chunk_paged(
+                self.tier.values, self.pool_dev, jnp.asarray(tokens),
+                jnp.asarray(self.pool.table[slot]), jnp.int32(start),
+            )
+        else:
+            self.caches = self.tier._prefill_chunk(
+                self.tier.values, self.caches, jnp.asarray(tokens),
+                jnp.int32(slot), jnp.int32(start),
+            )
 
     def reset_slot(self, slot):
         """Zero the slot's constant-state leaves across all members."""

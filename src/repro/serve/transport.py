@@ -359,12 +359,21 @@ class AsyncTransport(SimulatedLinkTransport):
     at send time) and deliver identical payloads, which is what makes the
     measured overlap ratio an apples-to-apples wall-clock comparison.
 
-    Concurrent in-flight hops each pay their full latency independently
-    (the §5.2.1 delay-dominated model: propagation delay, not contended
-    bandwidth, dominates the grid).  Determinism: delivery only affects
-    WHEN a deferred example is re-admitted, never its tokens — greedy
-    (temperature-0) cascades generate bitwise-identically under either
-    mode (tests/test_async_transport.py).
+    Link capacity is a token bucket: a hop's TRANSMISSION time
+    (``bytes / bandwidth``) reserves the link exclusively, so N concurrent
+    sends serialize on capacity — the k-th departure waits for k-1
+    transmissions — while the propagation ``delay`` still overlaps freely
+    (many packets in flight at once, none transmitting simultaneously:
+    real link physics, where the old model let concurrent hops share the
+    wire for free).  Metering is UNCHANGED contended or not: ``hop.latency``
+    stays the uncontended ``delay + bytes/bandwidth`` recorded at send
+    time, so serial and overlapped drains meter identical hops; contention
+    shows up only in wall-clock resolution order and ``total_wait``.
+    Without a ``bandwidth``, hops are pure delay and fully concurrent
+    (the §5.2.1 delay-dominated model).  Determinism: delivery only
+    affects WHEN a deferred example is re-admitted, never its tokens —
+    cascades generate bitwise-identically under either mode at any
+    temperature (tests/test_async_transport.py).
 
     Worker threads come from one lazily-created module-level pool shared by
     every AsyncTransport (workers only sleep, so sharing costs nothing and
@@ -378,6 +387,23 @@ class AsyncTransport(SimulatedLinkTransport):
                  *, overlap: bool = True):
         super().__init__(delay=delay, bandwidth=bandwidth)
         self.overlap = overlap
+        # token bucket over link capacity: _busy_until is the monotonic
+        # time the wire finishes its last reserved transmission
+        self._bucket_lock = threading.Lock()
+        self._busy_until = 0.0
+
+    def _reserve_tx(self, payload_bytes: int) -> float:
+        """Reserve this hop's exclusive transmission slot on the wire and
+        return the seconds the hop takes END-TO-END from now: queueing
+        behind earlier transmissions + its own bytes/bandwidth + the
+        propagation delay.  Serial (one-at-a-time) senders never queue, so
+        this degenerates to exactly ``_latency(payload_bytes)``."""
+        tx = payload_bytes / self.bandwidth if self.bandwidth else 0.0
+        with self._bucket_lock:
+            now = time.monotonic()
+            start = max(now, self._busy_until)
+            self._busy_until = start + tx
+        return (start - now) + tx + self.delay
 
     def _executor(self) -> ThreadPoolExecutor:
         global _WORKER_POOL
@@ -404,15 +430,19 @@ class AsyncTransport(SimulatedLinkTransport):
         """Start a real-wall-clock hop; the handle resolves after the
         link's latency has actually elapsed (see class docstring)."""
         hop = self._meter(src, dst, tree, n_examples)
+        # the wall-clock duration reserves link capacity (token bucket) and
+        # may exceed the metered hop.latency under contention; metering
+        # stays the uncontended number so drain order never changes hops
+        wall = self._reserve_tx(hop.payload_bytes)
         # snapshot off-device in the CALLER's thread: the payload's bytes
         # leave the source at send time.  The worker ONLY sleeps the link;
         # re-feeding to the device happens on the draining thread via the
         # handle's finalize, so jax device work stays single-threaded
         host = jax.device_get(tree)
         if not self.overlap:
-            time.sleep(hop.latency)
+            time.sleep(wall)
             return SendHandle.resolved(self, self._refeed(host))
-        fut = self._executor().submit(self._sleep_link, host, hop.latency)
+        fut = self._executor().submit(self._sleep_link, host, wall)
         return SendHandle(self, future=fut, finalize=self._refeed)
 
 

@@ -354,6 +354,69 @@ def test_kernel_contract_clean_guarded_launch(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# pass 5 — serving memory
+# ---------------------------------------------------------------------------
+
+
+def test_abc501_init_cache_in_serving_layer(tmp_path):
+    findings = lint_fixture(tmp_path, "src/repro/serve/mx.py", """
+        from repro.models import api
+
+        def build(cfg, n_slots, max_seq):
+            return api.init_cache(cfg, n_slots, max_seq)
+    """)
+    assert rules_of(findings) == ["ABC501"]
+
+
+def test_abc501_out_of_scope_in_models(tmp_path):
+    # batch-generation caches in the model layer are not slot memory
+    findings = lint_fixture(tmp_path, "src/repro/models/mx.py", """
+        from repro.models import api
+
+        def build(cfg, batch, max_seq):
+            return api.init_cache(cfg, batch, max_seq)
+    """)
+    assert findings == []
+
+
+def test_abc502_e_stacked_zeros(tmp_path):
+    findings = lint_fixture(tmp_path, "src/repro/serve/mx.py", """
+        import jax
+        import jax.numpy as jnp
+
+        def stack(values0, E):
+            return jax.tree.map(
+                lambda v: jnp.zeros((E,) + v.shape, v.dtype), values0
+            )
+    """)
+    assert rules_of(findings) == ["ABC502"]
+
+
+def test_abc502_clean_plain_shapes(tmp_path):
+    # literal-tuple and same-shape allocations are not the stack idiom
+    findings = lint_fixture(tmp_path, "src/repro/serve/mx.py", """
+        import jax.numpy as jnp
+
+        def build(v, n_pages, page_size):
+            a = jnp.zeros((n_pages, page_size), jnp.float32)
+            b = jnp.zeros(v.shape, v.dtype)
+            return a, b
+    """)
+    assert findings == []
+
+
+def test_memory_pragma_covers_oracle_site(tmp_path):
+    findings = lint_fixture(tmp_path, "src/repro/serve/mx.py", """
+        from repro.models import api
+
+        def build(cfg, n_slots, max_seq):
+            # abclint: disable=ABC501(fixture parity oracle justification)
+            return api.init_cache(cfg, n_slots, max_seq)
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
 # pragma mechanics
 # ---------------------------------------------------------------------------
 

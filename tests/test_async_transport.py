@@ -162,6 +162,99 @@ def test_async_serving_completes_all_requests_with_one_slot_tiers(stacks):
 
 
 # ---------------------------------------------------------------------------
+# sampled voting is transport-invariant (per-slot admission rng)
+# ---------------------------------------------------------------------------
+
+
+def _sampled_server(stacks, placement):
+    v1, v2 = stacks
+    return CascadeServer(
+        [
+            CascadeTier(SMALL, v1, TierSpec("t1", "vote", 0.9, k=3, cost=1.0),
+                        temperature=0.8),
+            CascadeTier(BIG, v2,
+                        TierSpec("t2", "confidence", -1.0, k=1, cost=50.0),
+                        temperature=0.8),
+        ],
+        placement=placement,
+    )
+
+
+def test_sampled_voting_bitwise_identical_across_transports(stacks):
+    """temperature=0.8 voting across sim / serial / overlapped links: every
+    slot's sampling key is fold_in(base, admit_seq) assigned at admission
+    (FIFO, so transport-timing-invariant), and each token draws from
+    fold_in(fold_in(slot_key, pos), e) — a trajectory never depends on
+    which OTHER slots share its decode dispatches.  Delivery timing
+    reshuffles slot co-residency between these three links, so bitwise
+    equality here is exactly the regression test for the old shared-rng
+    thread that made sampled voting interleaving-dependent."""
+    outs = []
+    for link in ("sim", "serial", "async"):
+        server = _sampled_server(stacks, edge_cloud(delay=0.03, link=link))
+        done = server.serve_continuous(
+            _requests(), n_slots=2, max_seq=32, seed=7
+        )
+        outs.append(
+            {tuple(r.tokens): (r.tier, tuple(r.output)) for r in done}
+        )
+    assert outs[0] == outs[1] == outs[2]
+
+
+# ---------------------------------------------------------------------------
+# link capacity: the token bucket serializes concurrent transmissions
+# ---------------------------------------------------------------------------
+
+
+def test_bandwidth_token_bucket_serializes_concurrent_sends():
+    """Two concurrent sends of tx=0.08s each on a shared wire: the second
+    delivery queues behind the first transmission (~2*tx end-to-end), while
+    pure-delay hops (no bandwidth) stay fully concurrent — the old model
+    let concurrent hops share the wire for free."""
+    payload = {"x": np.zeros(1000, np.float32)}  # 4000 bytes
+    tr = AsyncTransport(delay=0.0, bandwidth=50_000.0)  # tx = 0.08s
+    t0 = time.perf_counter()
+    h1 = tr.send_async("e", "c", payload, n_examples=1)
+    h2 = tr.send_async("e", "c", payload, n_examples=1)
+    h1.result()
+    t1 = time.perf_counter() - t0
+    h2.result()
+    t2 = time.perf_counter() - t0
+    assert t1 >= 0.08, f"first send must pay its own tx: {t1:.3f}s"
+    assert t2 >= 0.15, f"second send must queue behind the first: {t2:.3f}s"
+    # metering stays uncontended: both hops account delay + bytes/bandwidth
+    assert [h.latency for h in tr.hops] == [pytest.approx(0.08)] * 2
+    assert tr.total_wait > 0.0
+    # without a bandwidth the link is delay-dominated: hops fully overlap
+    tr2 = AsyncTransport(delay=0.08)
+    t0 = time.perf_counter()
+    hs = [tr2.send_async("e", "c", payload, n_examples=1) for _ in range(4)]
+    for h in hs:
+        h.result()
+    assert time.perf_counter() - t0 < 0.25, "pure-delay hops must overlap"
+
+
+def test_bandwidth_metering_identical_serial_vs_overlapped():
+    """Serial and overlapped drains of the same sends meter IDENTICAL hop
+    lists (order, bytes, examples, latency): contention exists only on the
+    wall clock and in total_wait, never in the accounting the benches and
+    cost model read."""
+    payload = {"x": np.arange(256, dtype=np.float32)}
+    hop_lists = []
+    for overlap in (False, True):
+        tr = AsyncTransport(delay=0.01, bandwidth=1e6, overlap=overlap)
+        hs = [tr.send_async("e", "c", payload, n_examples=2) for _ in range(3)]
+        for h in hs:
+            h.result()
+        assert tr.total_bytes == 3 * 256 * 4
+        hop_lists.append([
+            (h.src, h.dst, h.n_examples, h.payload_bytes, h.latency)
+            for h in tr.hops
+        ])
+    assert hop_lists[0] == hop_lists[1]
+
+
+# ---------------------------------------------------------------------------
 # SlotStream in-flight admission (unit level)
 # ---------------------------------------------------------------------------
 

@@ -307,6 +307,106 @@ def test_decode_attention_starts_multiblock_skip():
 
 
 # ---------------------------------------------------------------------------
+# decode attention: block-paged pools (page table via scalar prefetch)
+# ---------------------------------------------------------------------------
+
+
+def _paged_case(seed, B, n_pg, ps, KVH, H, hd, cur, share_first=False):
+    """Random pool + page table: each row maps exactly the pages its
+    cur_len needs (rest -1 = unmapped), scattered through the pool in
+    permuted order.  ``share_first`` points every row's first table entry
+    at the SAME pool page — the shared-prefix layout."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    P = B * n_pg + 2  # head-room + the overflow sink (never mapped)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k_pool = jax.random.normal(ks[1], (P, KVH, ps, hd))
+    v_pool = jax.random.normal(ks[2], (P, KVH, ps, hd))
+    perm = np.random.default_rng(seed).permutation(P - 1)
+    pages = np.full((B, n_pg), -1, np.int32)
+    t = 0
+    for b in range(B):
+        for i in range((int(cur[b]) + ps - 1) // ps):
+            pages[b, i] = perm[t]
+            t += 1
+    if share_first:
+        pages[:, 0] = pages[0, 0]
+    return q, k_pool, v_pool, jnp.asarray(pages), jnp.asarray(cur, jnp.int32)
+
+
+_PAGED_CASES = {
+    "ragged": dict(B=4, n_pg=4, ps=8, cur=[32, 17, 8, 1]),
+    "full": dict(B=2, n_pg=2, ps=16, cur=[32, 32]),
+    "window": dict(B=3, n_pg=4, ps=8, cur=[25, 32, 9], window=16),
+    "softcap": dict(B=2, n_pg=3, ps=8, cur=[24, 5], softcap=10.0),
+    "shared_prefix": dict(B=4, n_pg=3, ps=8, cur=[24, 20, 10, 9], share=True),
+}
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("case", sorted(_PAGED_CASES))
+def test_decode_attention_paged(impl, case):
+    c = dict(_PAGED_CASES[case])
+    window = c.pop("window", None)
+    softcap = c.pop("softcap", None)
+    share = c.pop("share", False)
+    H, KVH, hd = 4, 2, 64
+    q, kp, vp, pages, cur = _paged_case(
+        5, c["B"], c["n_pg"], c["ps"], KVH, H, hd, c["cur"], share_first=share
+    )
+    ref = dec_ref.decode_attention_paged_ref(
+        q, kp, vp, pages, cur, window=window, softcap=softcap
+    )
+    with kcfg.use_impl(impl):
+        out = dec_ops.decode_attention_paged(
+            q, kp, vp, pages, cur, window=window, softcap=softcap
+        )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4
+    )
+
+
+def test_decode_attention_paged_xla_bitwise_matches_dense():
+    """The gathered-view XLA route is BITWISE the dense masked sweep over
+    the equivalent contiguous cache — the foundation of the serving
+    paged == dense parity contract (unmapped pages gather zero rows, which
+    the length mask pins to softmax weight exactly 0.0)."""
+    B, n_pg, ps, KVH, H, hd = 4, 4, 8, 2, 4, 64
+    cur = [32, 17, 8, 1]
+    q, kp, vp, pages, curj = _paged_case(
+        9, B, n_pg, ps, KVH, H, hd, cur, share_first=True
+    )
+    S = n_pg * ps
+    kd = np.zeros((B, S, KVH, hd), np.float32)
+    vd = np.zeros((B, S, KVH, hd), np.float32)
+    pg = np.asarray(pages)
+    for b in range(B):
+        for i in range(n_pg):
+            if pg[b, i] >= 0:  # (KVH, ps, hd) -> (ps, KVH, hd)
+                kd[b, i * ps:(i + 1) * ps] = np.asarray(kp[pg[b, i]]).transpose(1, 0, 2)
+                vd[b, i * ps:(i + 1) * ps] = np.asarray(vp[pg[b, i]]).transpose(1, 0, 2)
+    with kcfg.use_impl("xla"):
+        paged = dec_ops.decode_attention_paged(q, kp, vp, pages, curj)
+        dense = dec_ops.decode_attention(q, jnp.asarray(kd), jnp.asarray(vd), curj)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+def test_decode_attention_paged_rejects_bad_inputs():
+    q, kp, vp, pages, cur = _paged_case(3, 2, 2, 8, 2, 4, 64, [9, 16])
+    with pytest.raises(ValueError, match="pool mismatch"):
+        dec_ops.decode_attention_paged(q, kp, vp[:-1], pages, cur)
+    with pytest.raises(ValueError, match="page table"):
+        dec_ops.decode_attention_paged(q, kp, vp, pages[:1], cur)
+    from repro.kernels.decode_attention import kernel as dec_kernel
+
+    # sublane guard: a 4-row page cannot tile the TPU block layout
+    qk = q.reshape(2, 2, 2, 64)
+    with pytest.raises(ValueError, match="sublane"):
+        dec_kernel.decode_attention_paged_bkgd(
+            qk, kp[:, :, :4], vp[:, :, :4], cur, pages, interpret=True
+        )
+
+
+# ---------------------------------------------------------------------------
 # serving regression: the left-pad carve-out stays on the kernel path
 # ---------------------------------------------------------------------------
 

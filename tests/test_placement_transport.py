@@ -270,6 +270,38 @@ link_rep = pl_rep.link(0)
 assert link_rep.total_bytes == link.total_bytes, (
     link_rep.total_bytes, link.total_bytes)
 assert link_rep.total_examples == link.total_examples
+
+# -- chunked re-feeds keep the landed sharding (no replicated intermediate) -
+# a 0.75-quantile threshold defers ~12 of 16 rows -> the tier-2 cover needs
+# TWO pow2 chunks (8 + 4), so every chunk goes through the slice/pad path
+# that cascade_apply_routed must re-place onto the transport's example
+# sharding; each fed chunk must arrive 2-way example-sharded, never as
+# pod-wide replicas
+score = np.asarray(deferral.confidence_rule(logits, 0.0).score)
+theta_hi = float(np.quantile(score, 0.75))
+server3 = CascadeServer([
+    CascadeTier(SMALL, v1, TierSpec("t1", "confidence", theta_hi, k=2, cost=1.0)),
+    CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1, cost=50.0)),
+], placement=pod_placement(mesh, 2))
+shard_log = []
+t2 = server3.tiers[1]
+orig_logits_fn = t2._last_logits
+def spy(values, batch):
+    fed = batch["tokens"]
+    shard_log.append((int(fed.shape[0]),
+                      {s.data.shape for s in fed.addressable_shards}))
+    return orig_logits_fn(values, batch)
+t2._last_logits = spy
+res3 = server3.classify(toks)
+n_def3 = int(res3.tier_counts[1])
+assert n_def3 > 8, n_def3  # must need a multi-bucket (8 + 4) cover
+assert len(shard_log) >= 2, shard_log
+for rows, shapes in shard_log:
+    assert len(shapes) == 1, (rows, shapes)
+    (shape,) = shapes
+    assert shape[0] * 2 == rows, (
+        "tier-2 chunk fed replicated (or mis-sharded): rows=%d shards=%r"
+        % (rows, shapes))
 print("POD_PLACEMENT_OK", n_def, link.total_bytes)
 """
 

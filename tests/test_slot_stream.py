@@ -28,6 +28,7 @@ from repro.models.params import unbox
 from repro.serve import (
     CascadeServer,
     CascadeTier,
+    PagePool,
     Request,
     ServingEngine,
     SlotStream,
@@ -216,6 +217,199 @@ def test_truncated_flag_on_cache_wall(stacks):
     assert len(done[big.rid].output) < 32
     assert not done[small.rid].truncated
     assert len(done[small.rid].output) == 2
+
+
+# ---------------------------------------------------------------------------
+# block-paged pools: paged serving == dense oracle, conservation, the wall
+# ---------------------------------------------------------------------------
+
+PAGED_FAMILIES = [f for f in FAMILIES if api.supports_paging(CONFIGS[f])]
+FALLBACK_FAMILIES = [f for f in FAMILIES if not api.supports_paging(CONFIGS[f])]
+
+
+def _prefix_requests(seed, n, prefix_len, *, tail_hi=12, max_new=(2, 5)):
+    """Ragged prompts all sharing the same ``prefix_len``-token prefix."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, 64, prefix_len).astype(np.int32)
+    reqs = []
+    for _ in range(n):
+        tail = rng.integers(0, 64, int(rng.integers(1, tail_hi))).astype(np.int32)
+        reqs.append(
+            Request(
+                tokens=np.concatenate([prefix, tail]),
+                max_new_tokens=int(rng.integers(*max_new)),
+            )
+        )
+    return reqs
+
+
+@pytest.mark.parametrize("E", [1, 3])
+@pytest.mark.parametrize("family", PAGED_FAMILIES)
+def test_paged_matches_dense_oracle(family, E, stacks):
+    """Block-paged serving (page_size=8, prompts sharing a >=2-page prefix,
+    ragged fillers) emits bitwise the dense-slot-cache oracle's tokens, the
+    prefix index actually shares pages, and every page returns to the free
+    list once the stream drains."""
+    cfg = CONFIGS[family]
+    reqs = _requests(seed=50 + E, n=3, lo=4, hi=20) + _prefix_requests(
+        seed=60 + E, n=4, prefix_len=17
+    )
+    outs = {}
+    for paged in (True, False):
+        if E == 1:
+            member = ens.take_member(stacks[family], 0)
+            eng = ServingEngine(cfg, member, max_seq=64)
+            stream = eng.slot_stream(n_slots=2, paged=paged, page_size=8)
+        else:
+            tier = CascadeTier(
+                cfg, stacks[family], TierSpec("t", "vote", 0.67, k=3)
+            )
+            stream = SlotStream(
+                TierBackend(
+                    tier, n_slots=2, max_seq=64, paged=paged, page_size=8
+                ),
+                n_slots=2,
+                max_seq=64,
+            )
+        assert stream.backend.paged is paged
+        stream.submit([copy.deepcopy(r) for r in reqs])
+        outs[paged] = {r.rid: gen for r, gen in stream.drain()}
+        if paged:
+            pool = stream.backend.pool
+            # the 17-token shared prefix spans two full pages; later prefix
+            # requests admit while an earlier holder is still resident
+            assert pool.stats["shared_hits"] >= 2
+            assert stream.stats["shared_tokens"] >= 16
+            assert pool.pages_in_use == 0, "drained stream must free all pages"
+            pool.assert_conserved()
+    assert sorted(outs[True]) == sorted(outs[False])
+    for rid in outs[True]:
+        np.testing.assert_array_equal(outs[True][rid], outs[False][rid])
+
+
+def test_paged_pool_wall_forces_completion(stacks):
+    """A pool too small for the offered load: admission fails while a slot
+    is free (request re-queued), growth fails mid-decode (slot is force-
+    completed with truncated=True), everything still completes exactly once
+    and the free list ends conserved with zero pages mapped."""
+    cfg = CONFIGS["dense"]
+    member = ens.take_member(stacks["dense"], 0)
+    eng = ServingEngine(cfg, member, max_seq=64)
+    rng = np.random.default_rng(71)
+    reqs = [
+        Request(tokens=rng.integers(0, 64, 9).astype(np.int32), max_new_tokens=40)
+        for _ in range(2)
+    ]
+    # 3 allocatable pages + sink; each prompt needs 2 pages at admission
+    stream = eng.slot_stream(n_slots=2, paged=True, page_size=8, n_pages=4)
+    stream.submit([copy.deepcopy(r) for r in reqs])
+    done = {r.rid: r for r, _ in stream.drain()}
+    pool = stream.backend.pool
+    assert sorted(done) == sorted(r.rid for r in reqs)
+    assert all(d.truncated for d in done.values()), "the wall must truncate"
+    assert stream.stats["forced_completions"] == 2
+    assert stream.stats["admit_failures"] >= 1
+    assert pool.pages_in_use == 0
+    pool.assert_conserved()
+
+
+def test_paged_pool_too_small_for_prompt_raises(stacks):
+    """A prompt needing more pages than the whole pool can never admit —
+    with every slot free that is a configuration error, not a retry."""
+    cfg = CONFIGS["dense"]
+    member = ens.take_member(stacks["dense"], 0)
+    eng = ServingEngine(cfg, member, max_seq=64)
+    stream = eng.slot_stream(n_slots=1, paged=True, page_size=8, n_pages=3)
+    stream.submit([
+        Request(
+            tokens=np.arange(17, dtype=np.int32) % 64, max_new_tokens=2
+        )
+    ])
+    with pytest.raises(RuntimeError, match="pool"):
+        list(stream.drain())
+
+
+@pytest.mark.parametrize("family", FALLBACK_FAMILIES)
+def test_state_families_fall_back_to_dense(family, stacks):
+    """Constant-state families (SSM/RWKV/hybrid) have no paged path yet;
+    paged=None must auto-select the dense slot cache and still serve."""
+    cfg = CONFIGS[family]
+    assert not api.supports_paging(cfg)
+    member = ens.take_member(stacks[family], 0)
+    eng = ServingEngine(cfg, member, max_seq=64)
+    stream = eng.slot_stream(n_slots=2)
+    assert stream.backend.paged is False
+    reqs = _requests(seed=81, n=2)
+    stream.submit([copy.deepcopy(r) for r in reqs])
+    done = {r.rid: gen for r, gen in stream.drain()}
+    assert sorted(done) == sorted(r.rid for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# PagePool mechanics (host-side, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_admit_share_release_conserves():
+    pool = PagePool(8, 4, n_slots=3, max_seq=16)
+    toks = list(range(11))  # m=10 -> 2 full pages, 3 pages mapped
+    assert pool.admit(0, toks) == 0, "cold admission shares nothing"
+    pool.assert_conserved()
+    assert pool.admit(1, toks) == 8, "both full prefix pages hit"
+    assert pool.stats["shared_hits"] == 2
+    assert pool.shared_pages_saved() == 2
+    pool.assert_conserved()
+    # prompt diverging inside page 1: only page 0 is shareable
+    toks2 = list(range(4)) + [63, 62, 61, 60, 59, 58, 57]
+    assert pool.admit(2, toks2) == 4
+    assert pool.stats["shared_hits"] == 3
+    pool.assert_conserved()
+    for s in range(3):
+        pool.release(s)
+    pool.assert_conserved()
+    assert pool.pages_in_use == 0
+    assert pool.free_pages == 7  # everything but the overflow sink
+
+
+def test_page_pool_cow_and_unregister_guard_shared_pages():
+    """Serving never writes into a registered page (writes start at or past
+    the full-page prefix), but the pool still guards the case: a write into
+    a multi-owner page COW-splits it, and a solo-owner write unregisters the
+    page before it mutates so later admissions cannot share stale content."""
+    pool = PagePool(8, 4, n_slots=2, max_seq=16)
+    toks = list(range(9))  # m=8: pages 0,1 registered, page 2 private
+    pool.admit(0, toks)
+    pool.admit(1, toks)
+    ok, copies = pool.prepare(1, 5)  # pos 5 -> page index 1, refcount 2
+    assert ok and len(copies) == 1
+    src, dst = copies[0]
+    assert int(pool.table[0, 1]) == src != dst == int(pool.table[1, 1])
+    assert pool.stats["cow_copies"] == 1
+    pool.assert_conserved()
+    pool.release(1)
+    ok, copies = pool.prepare(0, 1)  # now solo-owned: no copy, unregister
+    assert ok and copies == []
+    pool.assert_conserved()
+    # the mutated page no longer serves the prefix index: nothing shared
+    assert pool.admit(1, toks) == 0
+    pool.assert_conserved()
+    pool.release(0)
+    pool.release(1)
+    assert pool.pages_in_use == 0
+    pool.assert_conserved()
+
+
+def test_page_pool_admission_rollback_frees_everything():
+    pool = PagePool(4, 4, n_slots=2, max_seq=16)  # 3 allocatable pages
+    toks = list(range(8))  # m=7: 1 full page, 2 pages mapped
+    assert pool.admit(0, toks) == 0  # takes 2 pages, 1 free
+    assert pool.admit(1, toks) == 4  # shares page 0 + allocs 1: 0 free
+    pool.release(1)  # back to 1 free page
+    # a non-sharing prompt needing 2 fresh pages cannot fit -> full rollback
+    assert pool.admit(1, [63] * 8, share=False) is None
+    assert pool.stats["admit_failures"] == 1
+    assert np.all(pool.table[1] < 0), "failed admission must leave row empty"
+    pool.assert_conserved()
 
 
 # ---------------------------------------------------------------------------

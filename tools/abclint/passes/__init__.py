@@ -1,4 +1,4 @@
-"""The four abclint passes (DESIGN.md §9).  ``ALL_PASSES`` is the
+"""The five abclint passes (DESIGN.md §9).  ``ALL_PASSES`` is the
 registry the CLI and the tests run; adding a rule means adding it to a
 pass module's ``RULES`` table and its checker, nothing else."""
 from __future__ import annotations
@@ -7,6 +7,7 @@ from tools.abclint.passes import (
     determinism,
     host_sync,
     kernel_contract,
+    memory,
     retrace,
 )
 
@@ -15,6 +16,7 @@ ALL_PASSES = (
     host_sync.PASS,
     determinism.PASS,
     kernel_contract.PASS,
+    memory.PASS,
 )
 
 #: every known rule id -> description (including the engine's pragma rules)

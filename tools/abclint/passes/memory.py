@@ -1,0 +1,101 @@
+"""Pass 5 — serving memory (ABC5xx).
+
+The serving memory wall: a dense ``(E, n_slots, S, ...)`` slot cache pays
+every tier member full-length HBM for every slot, so max concurrency is
+bound by the longest sequence ever admitted.  Block-paged pools
+(serve/paging.py) are the fix — HBM scales with pages actually mapped, and
+shared prompt prefixes are an E-fold saving.  This pass keeps dense
+slot-cache allocations from creeping back into the serving layer outside
+the one sanctioned place: the ``paged=False`` parity-oracle branches,
+which carry a reasoned pragma.
+
+Scope: ``src/repro/serve/`` — the layer that owns slot memory.  Model and
+kernel code constructs caches for batch generation, which is not slot
+memory.
+
+ABC501  ``init_cache`` call in the serving layer — allocates a dense
+        (batch, max_seq) cache per leaf.  Slot backends must allocate
+        ``init_paged_pool`` instead; the dense parity oracle is the one
+        exemption (pragma with the reason).
+ABC502  ``jnp.zeros`` stacking a leading-axes tuple onto an existing
+        leaf's ``.shape`` (the ``jnp.zeros((E,) + v.shape)`` E-fold
+        dense-stack idiom) — multiplies whatever the leaf already pays by
+        E.  Stacking page-bounded pool planes is fine (pragma says so);
+        stacking dense slot caches is the memory wall.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.abclint import astutil
+from tools.abclint.engine import FileContext, Finding, Pass
+
+RULES = {
+    "ABC501": "dense slot-cache allocation (init_cache) in the serving "
+              "layer — use init_paged_pool; paged=False oracle needs a "
+              "reasoned pragma",
+    "ABC502": "jnp.zeros over a leading-tuple + .shape concatenation "
+              "(the (E,) + v.shape dense-stack idiom) — E-fold memory; "
+              "pragma the page-bounded / oracle sites",
+}
+
+
+def in_scope(relpath: str) -> bool:
+    return relpath.startswith("src/repro/serve/")
+
+
+def _is_shape_concat(node: ast.AST) -> bool:
+    """A BinOp ``+`` whose operand chain joins a tuple literal with some
+    expression's ``.shape`` attribute — the stack-a-leading-axis idiom."""
+    if not (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add)):
+        return False
+    has_tuple = has_shape = False
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Add):
+            stack.extend((n.left, n.right))
+        elif isinstance(n, ast.Tuple):
+            has_tuple = True
+        elif isinstance(n, ast.Attribute) and n.attr == "shape":
+            has_shape = True
+    return has_tuple and has_shape
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = astutil.call_name(node)
+        if d is not None and d.split(".")[-1] == "init_cache":
+            findings.append(
+                ctx.finding(
+                    "ABC501", node,
+                    f"{d}() allocates a dense (batch, max_seq) cache per "
+                    "leaf in the serving layer — slot memory must come "
+                    "from init_paged_pool (serve/paging.py); the "
+                    "paged=False parity oracle is the pragma'd exemption",
+                )
+            )
+        elif d in ("jnp.zeros", "jax.numpy.zeros") and node.args:
+            if _is_shape_concat(node.args[0]):
+                findings.append(
+                    ctx.finding(
+                        "ABC502", node,
+                        "stacking a leading axis onto an existing leaf "
+                        "((E,) + v.shape) multiplies its memory E-fold — "
+                        "dense slot caches must not be E-stacked; pragma "
+                        "page-bounded pool planes and the dense oracle",
+                    )
+                )
+    return findings
+
+
+PASS = Pass(
+    name="memory",
+    rules=RULES,
+    check_file=check_file,
+    scope=in_scope,
+)
