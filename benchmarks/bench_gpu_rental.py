@@ -86,5 +86,6 @@ def run(verbose=True):
         "fig4b_gpu_rental",
         us,
         f"rental_cost_reduction={single_cost/abc_cost:.2f}x;tier1_frac={fracs[0]:.2f};"
-        f"acc_delta={acc_abc-acc_single:+.3f};hop_bytes={link.total_bytes}",
+        f"acc_delta={acc_abc-acc_single:+.3f};"
+        f"transport.loopback.bytes={link.total_bytes}",
     )

@@ -22,6 +22,7 @@ reported in MB of pool writes skipped."""
 from __future__ import annotations
 
 import math
+import os
 import time
 
 import jax
@@ -29,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, smoke_mode
+from repro.obs import Observability, Tracer, validate_trace
 from repro.configs.base import ModelConfig
 from repro.core import ensemble as ens
 from repro.core.cascade import TierSpec
@@ -248,9 +250,29 @@ def run(verbose=True):
                                           cost=30.0)),
         ], placement=placement)
 
-    m = measure_overlap(_cont_build, _cont_requests, delay=delay)
+    # the overlapped run carries the full telemetry bundle (DESIGN.md §11):
+    # registry-backed p50/p99 request latency, per-tier cascade counters,
+    # the transport mirror, and — when REPRO_BENCH_TRACE names a path — a
+    # schema-validated Perfetto trace of every request's lifecycle
+    trace_path = os.environ.get("REPRO_BENCH_TRACE", "")
+    ob = Observability(tracer=Tracer()) if trace_path else Observability()
+    m = measure_overlap(_cont_build, _cont_requests, delay=delay, obs=ob)
     wall_ser, wall_ovl = m["wall_serial"], m["wall_overlap"]
     ovl_link, overlap_ratio = m["link"], m["ratio"]
+
+    reg = ob.registry
+    h_lat = reg.get("serve.request_latency_s")
+    assert h_lat is not None and h_lat.count == n_req
+    lat_p50_ms = h_lat.percentile(0.50) * 1e3
+    lat_p99_ms = h_lat.percentile(0.99) * 1e3
+    n_deferred = int(reg.value("cascade.tier0.deferred"))
+    link_bytes = int(reg.value("transport.edge0_cloud0.bytes"))
+    assert link_bytes == ovl_link.total_bytes  # registry mirror == meter
+    if trace_path:
+        trace = ob.tracer.export()
+        summ = validate_trace(trace)
+        assert summ["tracks"] == n_req  # every admitted rid has a track
+        ob.tracer.write(trace_path)
 
     qps = len(toks) / steady_c
     if verbose:
@@ -279,15 +301,40 @@ def run(verbose=True):
               f"serial -> {wall_ovl*1e3:.0f}ms overlapped "
               f"({overlap_ratio:.2f}x), blocked wait "
               f"{ovl_link.total_wait*1e3:.0f}ms")
+        print(f"# registry (serve.request_latency_s over {h_lat.count} "
+              f"requests): p50 {lat_p50_ms:.0f}ms, p99 {lat_p99_ms:.0f}ms; "
+              f"{n_deferred} deferred, {link_bytes} B over link"
+              + (f"; Perfetto trace -> {trace_path}" if trace_path else ""))
     assert retraced == 0, "steady-state classify must not retrace"
-    return csv_row(
+    # derived keys that read a stats surface carry the surface's
+    # fully-qualified registry name (DESIGN.md §11) — tools/perf_compare.py
+    # NAME_MAP translates the old unnamespaced keys in committed baselines
+    row = csv_row(
         "serving_cascade_classify", steady_c * 1e6,
         f"qps={qps:.0f};warmup_ms={warm_c*1e3:.0f};steady_ms={steady_c*1e3:.2f};"
         f"gen_steady_ms={steady_g*1e3:.1f};tier1_frac={server.tier_fractions(res)[0]:.2f};"
         f"cost_vs_all_big={res.cost/(30.0*len(toks)):.2f};"
-        f"admit_calls_per_{P}tok={calls_per_admit:.0f};admit_ms={admit_ms:.1f};"
+        f"admit_calls_per_{P}tok={calls_per_admit:.0f};"
+        f"slot_stream.admit_ms={admit_ms:.1f};"
         f"admit_speedup_vs_decode_feed={plain_wall/chunk_wall:.1f};"
-        f"paged_concurrency_x={concurrency_x:.0f};paged_peak_pages={peak_pages};"
-        f"efold_prefix_saved_mb={efold_saved_mb:.3f};"
+        f"paged_concurrency_x={concurrency_x:.0f};"
+        f"paging.pool_occupancy.peak={peak_pages};"
+        f"paging.shared_prefix_saved_mb={efold_saved_mb:.3f};"
         f"overlap_ratio={overlap_ratio:.2f}",
     )
+    # registry-backed report row: every value below reads a fully-qualified
+    # metric out of the run's registry, not an ad-hoc accumulator.  gate=off:
+    # the us column is p50 request latency over a real-sleep link (wall
+    # clock swings on shared runners); presence + non-NaN still gate.
+    row_obs = csv_row(
+        "serving_obs_registry", lat_p50_ms * 1e3,
+        f"serve.request_latency_s.p50_ms={lat_p50_ms:.1f};"
+        f"serve.request_latency_s.p99_ms={lat_p99_ms:.1f};"
+        f"serve.request_latency_s.count={h_lat.count};"
+        f"cascade.tier0.deferred={n_deferred};"
+        f"transport.edge0_cloud0.bytes={link_bytes};"
+        f"slot_stream.tier0.decode_tokens="
+        f"{int(reg.value('slot_stream.tier0.decode_tokens'))};"
+        f"gate=off",
+    )
+    return row + "\n" + row_obs

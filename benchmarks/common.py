@@ -112,7 +112,7 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
 
 
 def measure_overlap(build_server, make_requests, *, delay, n_slots=4,
-                    max_seq=32):
+                    max_seq=32, obs=None):
     """Shared serial-vs-overlapped serving harness (DESIGN.md §8), used by
     bench_edge_cloud and bench_serving so the asserted invariants cannot
     drift apart (examples/edge_to_cloud.py keeps a deliberately inline copy
@@ -128,22 +128,28 @@ def measure_overlap(build_server, make_requests, *, delay, n_slots=4,
     ``ratio`` = serial/overlapped makespan (1.0 when no hop ever crossed —
     nothing to overlap, nothing to divide).  Wall-clock GATES (ratio > 1,
     hop-count floors) are the caller's call: they know their deferral
-    structure and flake budget."""
+    structure and flake budget.
+
+    ``obs`` (a ``repro.obs.Observability``) is attached to the OVERLAPPED
+    run only — the representative serving mode — so the caller's registry
+    picks up ``serve.request_latency_s`` p50/p99, the per-tier cascade
+    counters, and the ``transport.*`` mirror (plus a Perfetto trace when
+    ``obs.tracer`` is enabled) for exactly one serve of the request set."""
     import time as _time
 
     from repro.serve import edge_cloud
 
-    def serve(link_kind):
+    def serve(link_kind, obs=None):
         placement = edge_cloud(delay=delay, link=link_kind)
         server = build_server(placement)
         t0 = _time.perf_counter()
         done = server.serve_continuous(make_requests(), n_slots=n_slots,
-                                       max_seq=max_seq)
+                                       max_seq=max_seq, obs=obs)
         return done, _time.perf_counter() - t0, placement.link(0)
 
     serve("sim")
     done_ser, wall_ser, link_ser = serve("serial")
-    done_ovl, wall_ovl, link_ovl = serve("async")
+    done_ovl, wall_ovl, link_ovl = serve("async", obs=obs)
 
     key = lambda done: {tuple(r.tokens): (r.tier, tuple(r.output))
                         for r in done}

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core import deferral
 from repro.kernels.compaction import ops as compaction_ops
+from repro.obs import global_registry as _global_registry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,26 +152,29 @@ def _pad_rows(x, n):
 # host-fetch accounting: every INTENTIONAL device→host read in the routed
 # cascade goes through _fetch (explicit jax.device_get, transfer-guard
 # clean) and is byte-metered, so tests can assert the defer path moves
-# only scalar counts + final results to the host — never payload.
+# only scalar counts + final results to the host — never payload.  The
+# meters are ``host_fetch.*`` counters on the process-wide registry
+# (DESIGN.md §11); ``host_fetch_stats()`` is the legacy dict view.
 # ---------------------------------------------------------------------------
 
-_FETCH_STATS = {"bytes": 0, "calls": 0}
+_C_FETCH_BYTES = _global_registry().counter("host_fetch.bytes")
+_C_FETCH_CALLS = _global_registry().counter("host_fetch.calls")
 
 
 def host_fetch_stats() -> dict:
-    return dict(_FETCH_STATS)
+    return {"bytes": _C_FETCH_BYTES.value, "calls": _C_FETCH_CALLS.value}
 
 
 def reset_host_fetch_stats() -> None:
-    _FETCH_STATS["bytes"] = 0
-    _FETCH_STATS["calls"] = 0
+    _C_FETCH_BYTES.reset()
+    _C_FETCH_CALLS.reset()
 
 
 def _fetch(tree):
     for leaf in jax.tree.leaves(tree):
         if hasattr(leaf, "dtype"):
-            _FETCH_STATS["bytes"] += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
-    _FETCH_STATS["calls"] += 1
+            _C_FETCH_BYTES.add(int(leaf.size) * jnp.dtype(leaf.dtype).itemsize)
+    _C_FETCH_CALLS.add(1)
     return jax.device_get(tree)
 
 

@@ -38,7 +38,7 @@ import dataclasses
 import functools
 import zlib
 from types import SimpleNamespace
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,7 @@ from repro.core.cascade import (
     host_fetch,
 )
 from repro.models import api
+from repro.obs import Observability, UNIT_BUCKETS
 from repro.serve.batching import Request
 from repro.serve.engine import _counted, grow_cache
 from repro.serve.slot_stream import SlotStream, TierBackend
@@ -388,6 +389,7 @@ class CascadeServer:
         paged=None,
         page_size: int = 16,
         n_pages=None,
+        obs: Optional[Observability] = None,
     ) -> List[Request]:
         """Continuous-batching generate mode: every tier runs a
         ``SlotStream`` (serve/slot_stream.py, the E=k instantiation of the
@@ -419,17 +421,40 @@ class CascadeServer:
                 f"request {r.rid}: prompt+budget "
                 f"{len(r.tokens)}+{r.max_new_tokens} exceeds max_seq={max_seq}"
             )
+        # telemetry (DESIGN.md §11): one bundle spans every tier's stream,
+        # pool, and placement link — pass ``obs`` to get a unified registry
+        # namespace and (with an enabled tracer) the per-request lifecycle
+        # trace; the default private bundle keeps legacy behaviour
+        ob = obs if obs is not None else Observability.private()
+        tr = ob.tracer
+        clk = ob.clock
+        h_lat = ob.registry.histogram("serve.request_latency_s")
+        hosts = self._host_names()
+        if self.placement is not None:
+            for i, link in enumerate(self.placement.links):
+                link.attach_obs(ob, f"{hosts[i]}_{hosts[i + 1]}")
+        tier_sc = [ob.scope(f"cascade.tier{i}") for i in range(len(self.tiers))]
+        c_answered = [sc.counter("answered") for sc in tier_sc]
+        c_deferred = [sc.counter("deferred") for sc in tier_sc]
+        c_tokens = [sc.counter("output_tokens") for sc in tier_sc]
+        h_margin = [
+            sc.histogram("agreement_margin", buckets=UNIT_BUCKETS)
+            for sc in tier_sc
+        ]
         streams = [
             SlotStream(
                 TierBackend(
                     t, n_slots=n_slots, max_seq=max_seq, seed=seed + i,
                     paged=paged, page_size=page_size, n_pages=n_pages,
+                    obs=obs, pool_name=f"paging.tier{i}",
                 ),
                 n_slots=n_slots, max_seq=max_seq,
                 chunked_prefill=chunked_prefill,
+                obs=obs, name=f"slot_stream.tier{i}",
             )
             for i, t in enumerate(self.tiers)
         ]
+        t_submit = {r.rid: clk() for r in requests}
         streams[0].submit(requests)
         done: List[Request] = []
         n_tiers = len(streams)
@@ -458,7 +483,18 @@ class CascadeServer:
                     # and winning digest scalars (8 bytes)
                     defer_h, pred_h = host_fetch((out.defer[0], out.pred[0]))
                     defer = bool(defer_h) and i < n_tiers - 1
+                    # agreement margin: the winning digest's vote share
+                    # (1.0 = unanimous) — digests is a host array
+                    vote_counts = np.unique(digests, return_counts=True)[1]
+                    margin = float(vote_counts.max()) / tier.k
+                    h_margin[i].record(margin)
+                    if tr.enabled:
+                        tr.instant(
+                            r.rid, "defer_vote",
+                            tier=i, margin=margin, defer=bool(defer_h),
+                        )
                     if defer:
+                        c_deferred[i].add(1)
                         link = (
                             self.placement.link(i)
                             if self.placement is not None else None
@@ -469,27 +505,53 @@ class CascadeServer:
                             # meters the hop NOW; the handle resolves at a
                             # tier-(i+1) admission point, so this tier's
                             # remaining slots keep decoding over the hop
-                            hosts = self._host_names()
+                            # abclint: disable=ABC203(r.tokens is the host prompt array — the payload is built host-side before the metered send)
+                            payload = {"tokens": np.asarray(r.tokens, np.int32)}
+                            if tr.enabled:
+                                tr.begin(
+                                    r.rid, "hop",
+                                    src=hosts[i], dst=hosts[i + 1],
+                                    n_bytes=int(payload["tokens"].nbytes),
+                                )
                             handle = link.send_async(
-                                hosts[i], hosts[i + 1],
-                                {"tokens": np.asarray(r.tokens, np.int32)},
-                                n_examples=1,
+                                hosts[i], hosts[i + 1], payload, n_examples=1,
                             )
+                            hop = link.hops[-1]  # metered at send time
 
-                            def _land(delivered, r=r):
+                            def _land(delivered, r=r, handle=handle, hop=hop):
                                 r.tokens = np.asarray(
                                     delivered["tokens"], np.int32
                                 )
+                                if tr.enabled:
+                                    # the hop span closes at delivery (on
+                                    # the draining thread); its args carry
+                                    # the overlap split — blocked is what
+                                    # result() charged the caller, hidden
+                                    # is the link time decode covered
+                                    blocked = float(handle.wait_time)
+                                    tr.end(
+                                        r.rid, "hop",
+                                        link_s=float(hop.latency),
+                                        blocked_s=blocked,
+                                        hidden_s=max(
+                                            0.0, float(hop.latency) - blocked
+                                        ),
+                                    )
                                 return r
 
                             streams[i + 1].submit_inflight(handle, _land)
                         else:
                             streams[i + 1].submit([r])
                     else:
+                        c_answered[i].add(1)
+                        c_tokens[i].add(int(gen.shape[1]))
                         # abclint: disable=ABC202(argmax over the host digest array — pred_h fetched above)
                         winner = int(np.argmax(digests == pred_h))
                         r.output = gen[winner].astype(np.int32)
                         r.tier = i
+                        h_lat.record(clk() - t_submit[r.rid])
+                        if tr.enabled:
+                            tr.instant(r.rid, "complete", tier=i)
                         done.append(r)
         self.last_stream_stats = [dict(st.stats) for st in streams]
         return done

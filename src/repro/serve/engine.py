@@ -36,6 +36,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.cascade import host_fetch
 from repro.models import api
+from repro.obs import Observability, StatsView
 from repro.serve.batching import Request, RequestQueue
 
 # ---------------------------------------------------------------------------
@@ -188,6 +189,7 @@ class ServingEngine:
         max_seq: int = 512,
         temperature: float = 0.0,
         seed: int = 0,
+        obs: Optional[Observability] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -199,7 +201,18 @@ class ServingEngine:
         programs = model_programs(cfg)
         self._prefill = programs.prefill
         self._decode = programs.decode
-        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "batches": 0}
+        # registry-backed counters (DESIGN.md §11); ``stats`` is the legacy
+        # read-only dict view over them
+        self.obs = obs if obs is not None else Observability.private()
+        sc = self.obs.scope("engine")
+        self._c_prefill = sc.counter("prefill_tokens")
+        self._c_decode = sc.counter("decode_tokens")
+        self._c_batches = sc.counter("batches")
+        self.stats = StatsView({
+            "prefill_tokens": lambda: self._c_prefill.value,
+            "decode_tokens": lambda: self._c_decode.value,
+            "batches": lambda: self._c_batches.value,
+        })
 
     # -- low-level --------------------------------------------------------
     def _supports_starts(self) -> bool:
@@ -220,7 +233,7 @@ class ServingEngine:
         batches (rows never attend across their own prompt start, RoPE runs
         relative to it — padded logits match solo logits)."""
         logits, _ = self._prefill(self.params, self._prefill_batch(tokens, starts))
-        self.stats["prefill_tokens"] += tokens.size
+        self._c_prefill.add(tokens.size)
         return host_fetch(logits)
 
     def _sample(self, logits: jax.Array) -> jax.Array:
@@ -237,7 +250,7 @@ class ServingEngine:
         B, S = tokens.shape
         total = S + max_new_tokens
         logits, cache = self._prefill(self.params, self._prefill_batch(tokens, starts))
-        self.stats["prefill_tokens"] += tokens.size
+        self._c_prefill.add(tokens.size)
         cache = grow_cache(cache, total - S, self.cfg)
         out = []
         tok = self._sample(logits)[:, None]
@@ -249,7 +262,7 @@ class ServingEngine:
             logits, cache = self._decode(
                 self.params, tok, cache, jnp.int32(S + t), **dec_kw
             )
-            self.stats["decode_tokens"] += B
+            self._c_decode.add(B)
             tok = self._sample(logits)[:, None]
         return np.stack(out, axis=1)
 
@@ -264,25 +277,30 @@ class ServingEngine:
         paged: Optional[bool] = None,
         page_size: int = 16,
         n_pages: Optional[int] = None,
+        obs: Optional[Observability] = None,
     ):
         """A fresh ``SlotStream`` (serve/slot_stream.py) over this engine's
         compile-once programs — the E=1 instantiation of the shared slot
         state machine.  ``paged`` selects block-paged KV pools (default:
         wherever the family supports them; ``paged=False`` keeps the dense
         slot cache as the parity oracle); ``n_pages`` bounds pool HBM
-        (default: dense-equivalent capacity plus the overflow sink)."""
+        (default: dense-equivalent capacity plus the overflow sink).
+        ``obs`` shares a telemetry bundle with the stream and its pool
+        (default: the stream keeps a private registry, preserving the
+        fresh-per-stream legacy stats contract)."""
         from repro.serve.slot_stream import EngineBackend, SlotStream
 
         if max_seq is None:
             max_seq = self.max_seq
         backend = EngineBackend(
             self.cfg, self.params, model_programs(self.cfg), self._sample,
-            n_slots=n_slots, max_seq=max_seq, stats=self.stats,
-            paged=paged, page_size=page_size, n_pages=n_pages,
+            n_slots=n_slots, max_seq=max_seq,
+            prefill_counter=self._c_prefill,
+            paged=paged, page_size=page_size, n_pages=n_pages, obs=obs,
         )
         return SlotStream(
             backend, n_slots=n_slots, max_seq=max_seq,
-            chunked_prefill=chunked_prefill, max_chunk=max_chunk,
+            chunked_prefill=chunked_prefill, max_chunk=max_chunk, obs=obs,
         )
 
     def serve_continuous(
@@ -295,6 +313,7 @@ class ServingEngine:
         paged: Optional[bool] = None,
         page_size: int = 16,
         n_pages: Optional[int] = None,
+        obs: Optional[Observability] = None,
     ) -> List[Request]:
         """Slot-based continuous batching: a thin driver over ``SlotStream``
         (the E=1 case of the shared slot state machine).  One decode step
@@ -306,17 +325,27 @@ class ServingEngine:
         Repeated invocations reuse the module-level jitted programs —
         nothing is re-jitted per call.  Requests cut short by the cache
         wall (``pos >= max_seq - 1``) come back with ``truncated=True``.
-        Returns the completed requests."""
+        With ``obs``, the stream/pool record into the shared registry, each
+        completion lands in the ``serve.request_latency_s`` histogram, and
+        an enabled tracer gets the full per-request lifecycle plus the
+        terminal ``complete`` instant.  Returns the completed requests."""
+        ob = obs if obs is not None else self.obs
         stream = self.slot_stream(
             n_slots=n_slots, max_seq=max_seq, chunked_prefill=chunked_prefill,
-            paged=paged, page_size=page_size, n_pages=n_pages,
+            paged=paged, page_size=page_size, n_pages=n_pages, obs=obs,
         )
+        clk = ob.clock
+        h_lat = ob.registry.histogram("serve.request_latency_s")
+        t_submit = {r.rid: clk() for r in requests}
         stream.submit(requests)
         done: List[Request] = []
         for r, gen in stream.drain():
             r.output = gen[0].astype(np.int32)  # gen is host-side (backend fetched)
+            h_lat.record(clk() - t_submit[r.rid])
+            if ob.tracer.enabled:
+                ob.tracer.instant(r.rid, "complete", truncated=r.truncated)
             done.append(r)
-        self.stats["decode_tokens"] += stream.stats["decode_tokens"]
+        self._c_decode.add(stream.stats["decode_tokens"])
         self.last_stream_stats = dict(stream.stats)
         return done
 
@@ -337,7 +366,7 @@ class ServingEngine:
                 toks, max_new,
                 starts=starts if self._supports_starts() else None,
             )
-            self.stats["batches"] += 1
+            self._c_batches.add(1)
             for i, r in enumerate(batch):
                 r.output = gen[i, : r.max_new_tokens]
                 done.append(r)

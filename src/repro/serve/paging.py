@@ -49,6 +49,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import Observability, StatsView
+
 
 def prefix_page_keys(tokens, page_size: int, n_pages: int) -> List[int]:
     """Chain-crc32 keys for the first ``n_pages`` full pages of a prompt:
@@ -72,7 +74,9 @@ class PagePool:
     reshaping the mapping never retraces anything.
     """
 
-    def __init__(self, n_pages: int, page_size: int, *, n_slots: int, max_seq: int):
+    def __init__(self, n_pages: int, page_size: int, *, n_slots: int,
+                 max_seq: int, obs: Optional[Observability] = None,
+                 name: str = "paging"):
         if max_seq % page_size != 0:
             raise ValueError(
                 f"page_size {page_size} must divide max_seq {max_seq} "
@@ -92,14 +96,27 @@ class PagePool:
         self._free: List[int] = list(range(n_pages - 2, -1, -1))
         self._prefix_index: Dict[int, int] = {}  # chain key -> page
         self._page_key: Dict[int, int] = {}  # page -> chain key (registered)
-        self.stats = {
-            "allocated": 0,
-            "freed": 0,
-            "shared_hits": 0,  # admissions' pages served from the index
-            "cow_copies": 0,
-            "admit_failures": 0,
-            "peak_pages_in_use": 0,
-        }
+        # registry-backed accounting (DESIGN.md §11): counters for the
+        # allocator events, gauges for occupancy (peak = the old
+        # peak_pages_in_use) and cross-slot sharing; ``stats`` is the
+        # legacy read-only view over them
+        self.obs = obs if obs is not None else Observability.private()
+        sc = self.obs.scope(name)
+        self._c_allocated = sc.counter("allocated")
+        self._c_freed = sc.counter("freed")
+        self._c_shared_hits = sc.counter("shared_hits")
+        self._c_cow = sc.counter("cow_copies")
+        self._c_admit_failures = sc.counter("admit_failures")
+        self._g_occupancy = sc.gauge("pool_occupancy")
+        self._g_sharing = sc.gauge("shared_pages_saved")
+        self.stats = StatsView({
+            "allocated": lambda: self._c_allocated.value,
+            "freed": lambda: self._c_freed.value,
+            "shared_hits": lambda: self._c_shared_hits.value,
+            "cow_copies": lambda: self._c_cow.value,
+            "admit_failures": lambda: self._c_admit_failures.value,
+            "peak_pages_in_use": lambda: self._g_occupancy.peak,
+        })
 
     # -- accounting --------------------------------------------------------
     @property
@@ -140,10 +157,8 @@ class PagePool:
             return None
         pg = self._free.pop()
         self.refcount[pg] = 1
-        self.stats["allocated"] += 1
-        self.stats["peak_pages_in_use"] = max(
-            self.stats["peak_pages_in_use"], self.pages_in_use
-        )
+        self._c_allocated.add(1)
+        self._g_occupancy.set(self.pages_in_use)
         return pg
 
     def _unregister(self, pg: int):
@@ -157,7 +172,8 @@ class PagePool:
         if self.refcount[pg] == 0:
             self._unregister(pg)
             self._free.append(pg)
-            self.stats["freed"] += 1
+            self._c_freed.add(1)
+            self._g_occupancy.set(self.pages_in_use)
 
     # -- slot lifecycle ----------------------------------------------------
     def admit(self, slot: int, tokens, *, share: bool = True) -> Optional[int]:
@@ -189,7 +205,8 @@ class PagePool:
             mapped.append(pg)
             self.refcount[pg] += 1
             shared = i + 1
-            self.stats["shared_hits"] += 1
+            self._c_shared_hits.add(1)
+            self._g_sharing.set(self.shared_pages_saved())
         for i in range(shared, n_need):
             pg = self._alloc()
             if pg is None:
@@ -197,7 +214,7 @@ class PagePool:
                 for j in range(i):
                     self._decref(mapped[j])
                     row[j] = -1
-                self.stats["admit_failures"] += 1
+                self._c_admit_failures.add(1)
                 return None
             row[i] = pg
             mapped.append(pg)
@@ -220,6 +237,7 @@ class PagePool:
             if pg >= 0:
                 self._decref(pg)
         row[:] = -1
+        self._g_sharing.set(self.shared_pages_saved())
 
     def prepare(self, slot: int, pos: int) -> Tuple[bool, List[Tuple[int, int]]]:
         """Make position ``pos`` of ``slot`` writable before a decode step.
@@ -241,7 +259,7 @@ class PagePool:
                 return False, []
             self.refcount[pg] -= 1  # still shared by the remaining owners
             self.table[slot, i] = new
-            self.stats["cow_copies"] += 1
+            self._c_cow.add(1)
             return True, [(pg, new)]
         # solo-owned: if registered, unregister before the owner mutates it
         self._unregister(pg)

@@ -76,7 +76,6 @@ parity oracle.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from typing import List, Optional, Sequence, Tuple
 
@@ -87,6 +86,7 @@ import numpy as np
 from repro.core.cascade import host_fetch, prompt_chunks
 from repro.models import api
 from repro.models.params import unbox
+from repro.obs import Observability, StatsView
 from repro.serve.batching import Request
 
 
@@ -101,6 +101,8 @@ class SlotStream:
         max_seq: int = 256,
         chunked_prefill: bool = True,
         max_chunk: int = 256,
+        obs: Optional[Observability] = None,
+        name: str = "slot_stream",
     ):
         self.backend = backend
         self.n_slots = n_slots
@@ -119,27 +121,56 @@ class SlotStream:
         self.pos = np.zeros(n_slots, np.int32)
         self.tok = np.zeros((E, n_slots, 1), np.int32)
         self.steps = 0
-        self.stats = {
-            "admitted": 0,
-            "admit_failures": 0,  # begin_slot refusals (pool exhausted)
-            "forced_completions": 0,  # slots cut short by pool exhaustion
-            "chunk_calls": 0,
-            "chunk_tokens": 0,
-            "shared_tokens": 0,  # prompt tokens served from shared pages
-            "decode_tokens": 0,  # active slot-steps through the decode program
-            # host wall time inside admission / decode dispatch.  jax
-            # dispatch is async, so these measure enqueue overhead, not
-            # device compute — block_until_ready on the backend's cache
-            # around refill()/step() to measure true device latency
-            # (benchmarks/bench_serving.py does).
-            "admit_time": 0.0,
-            "decode_time": 0.0,
-            # in-flight admissions that arrived over a transport link, and
-            # how long the stream actually BLOCKED on unresolved handles
-            # (0.0 when every hop was fully hidden behind decode work)
-            "inflight_admitted": 0,
-            "inflight_wait": 0.0,
-        }
+        # telemetry (DESIGN.md §11): counters + histograms on the stream's
+        # obs registry, named under ``name`` (cascade tiers pass
+        # ``slot_stream.tier{i}`` so one registry serves every tier).
+        # Timestamps go through the injectable ``obs.clock`` (ABC601), and
+        # everything recorded is a host scalar the loop already owns.
+        self.obs = obs if obs is not None else Observability.private()
+        self.name = name
+        self._clock = self.obs.clock
+        self._tr = self.obs.tracer
+        sc = self.obs.scope(name)
+        self._c_admitted = sc.counter("admitted")
+        self._c_admit_failures = sc.counter("admit_failures")
+        self._c_forced = sc.counter("forced_completions")
+        self._c_chunk_calls = sc.counter("chunk_calls")
+        self._c_chunk_tokens = sc.counter("chunk_tokens")
+        self._c_shared_tokens = sc.counter("shared_tokens")
+        self._c_decode_tokens = sc.counter("decode_tokens")
+        self._c_inflight_admitted = sc.counter("inflight_admitted")
+        # host wall time histograms.  jax dispatch is async, so the admit/
+        # decode dispatch times measure enqueue overhead, not device
+        # compute — block_until_ready on the backend's cache around
+        # refill()/step() to measure true device latency
+        # (benchmarks/bench_serving.py does).  The old conflated
+        # ``admit_time`` accumulator is split three ways:
+        #   admit.begin_slot_s        pool page claim / slot reset
+        #   admit.prefill_dispatch_s  bucketed chunk-prefill dispatch
+        #   admit.inflight_wait_s     BLOCKED time on unresolved transport
+        #                             handles (0 when hops fully hid)
+        self._h_begin_slot = sc.histogram("admit.begin_slot_s")
+        self._h_prefill_dispatch = sc.histogram("admit.prefill_dispatch_s")
+        self._h_decode_dispatch = sc.histogram("decode.dispatch_s")
+        self._h_inflight_wait = sc.histogram("admit.inflight_wait_s")
+        # the legacy ad-hoc stats dict survives as a read-only view over
+        # the registry (same keys, same totals — ``admit_time`` is now the
+        # sum of its two split histograms)
+        self.stats = StatsView({
+            "admitted": lambda: self._c_admitted.value,
+            "admit_failures": lambda: self._c_admit_failures.value,
+            "forced_completions": lambda: self._c_forced.value,
+            "chunk_calls": lambda: self._c_chunk_calls.value,
+            "chunk_tokens": lambda: self._c_chunk_tokens.value,
+            "shared_tokens": lambda: self._c_shared_tokens.value,
+            "decode_tokens": lambda: self._c_decode_tokens.value,
+            "admit_time": lambda: (
+                self._h_begin_slot.sum + self._h_prefill_dispatch.sum
+            ),
+            "decode_time": lambda: self._h_decode_dispatch.sum,
+            "inflight_admitted": lambda: self._c_inflight_admitted.value,
+            "inflight_wait": lambda: self._h_inflight_wait.sum,
+        })
 
     # -- admission ---------------------------------------------------------
     def _check_request(self, r: Request) -> Request:
@@ -159,6 +190,8 @@ class SlotStream:
         Prompts must fit the slot: 1 <= len(tokens) < max_seq."""
         for r in requests:
             self.queue.append(self._check_request(r))
+            if self._tr.enabled:
+                self._tr.begin(r.rid, "queue_wait", stream=self.name)
 
     def submit_inflight(self, handle, finalize):
         """Enqueue work whose payload is still crossing a transport link.
@@ -185,9 +218,12 @@ class SlotStream:
             self.inflight[0][0].done() or (block and landed == 0)
         ):
             handle, finalize = self.inflight.popleft()
-            self.queue.append(self._check_request(finalize(handle.result())))
-            self.stats["inflight_wait"] += handle.wait_time
-            self.stats["inflight_admitted"] += 1
+            r = self._check_request(finalize(handle.result()))
+            self.queue.append(r)
+            self._h_inflight_wait.record(handle.wait_time)
+            self._c_inflight_admitted.add(1)
+            if self._tr.enabled:
+                self._tr.begin(r.rid, "queue_wait", stream=self.name)
             landed += 1
         return landed
 
@@ -205,7 +241,7 @@ class SlotStream:
             self.slot_req[s] = None
             return
         r = self.queue[0]  # peek: admission may be refused by the pool
-        t0 = time.perf_counter()
+        t0 = self._clock()
         begin = getattr(self.backend, "begin_slot", None)
         if begin is not None:
             # prefix pages are only shareable under chunked prefill (the
@@ -214,7 +250,8 @@ class SlotStream:
             if shared is None:
                 # pool exhausted: the request stays at the queue head and
                 # the slot stays free; completions will release pages
-                self.stats["admit_failures"] += 1
+                self._h_begin_slot.record(self._clock() - t0)
+                self._c_admit_failures.add(1)
                 self.slot_req[s] = None
                 if not any(q is not None for q in self.slot_req):
                     raise RuntimeError(
@@ -225,7 +262,16 @@ class SlotStream:
         else:
             self.backend.reset_slot(s)
             shared = 0
+        t1 = self._clock()
+        self._h_begin_slot.record(t1 - t0)
         self.queue.popleft()
+        tr = self._tr
+        if tr.enabled:
+            tr.end(r.rid, "queue_wait")
+            tr.begin(
+                r.rid, "admit", stream=self.name, slot=s,
+                prompt_tokens=len(r.tokens), shared_tokens=shared,
+            )
         consumed = 0
         if self.chunked and len(r.tokens) > 1:
             # consume prompt[:-1] in bucketed pow2 chunks; the last prompt
@@ -237,19 +283,26 @@ class SlotStream:
             chunks = prompt_chunks(m - shared, self.max_chunk)
             off = shared
             for c in chunks:
+                if tr.enabled:
+                    tr.begin(r.rid, "prefill_chunk", tokens=c, start=off)
                 self.backend.prefill_chunk(r.tokens[off : off + c], s, off)
+                if tr.enabled:
+                    tr.end(r.rid, "prefill_chunk")
                 off += c
             consumed = off
-            self.stats["chunk_calls"] += len(chunks)
-            self.stats["chunk_tokens"] += m - shared
-            self.stats["shared_tokens"] += shared
+            self._c_chunk_calls.add(len(chunks))
+            self._c_chunk_tokens.add(m - shared)
+            self._c_shared_tokens.add(shared)
+            self._h_prefill_dispatch.record(self._clock() - t1)
         self.slot_req[s] = r
         self.slot_consumed[s] = consumed + 1
         self.slot_emitted[s] = []
         self.pos[s] = consumed
         self.tok[:, s, 0] = r.tokens[consumed]
-        self.stats["admitted"] += 1
-        self.stats["admit_time"] += time.perf_counter() - t0
+        self._c_admitted.add(1)
+        if tr.enabled:
+            tr.end(r.rid, "admit")
+            tr.begin(r.rid, "decode", stream=self.name, slot=s)
 
     def refill(self):
         """Admit queued requests into every free slot.  This is the
@@ -302,16 +355,19 @@ class SlotStream:
                     else np.zeros((self.backend.E, 0), np.int32)
                 )
                 completed.append((r, gen))
-                self.stats["forced_completions"] += 1
+                self._c_forced.add(1)
+                if self._tr.enabled:
+                    self._tr.end(r.rid, "decode", new_tokens=gen.shape[1])
+                    self._tr.instant(r.rid, "forced_complete", slot=s)
                 self._release(s)
                 self._admit(s)
             n_active = sum(r is not None for r in self.slot_req)
             if n_active == 0:
                 return completed
-        t0 = time.perf_counter()
+        t0 = self._clock()
         nxt = self.backend.decode(self.tok, self.pos)  # (E, n_slots)
-        self.stats["decode_time"] += time.perf_counter() - t0
-        self.stats["decode_tokens"] += n_active
+        self._h_decode_dispatch.record(self._clock() - t0)
+        self._c_decode_tokens.add(n_active)
         self.steps += 1
         for s, r in enumerate(self.slot_req):
             if r is None:
@@ -334,6 +390,11 @@ class SlotStream:
                         else np.zeros((self.backend.E, 0), np.int32)
                     )
                     completed.append((r, gen))
+                    if self._tr.enabled:
+                        self._tr.end(
+                            r.rid, "decode",
+                            new_tokens=gen.shape[1], truncated=r.truncated,
+                        )
                     self._release(s)
                     self._admit(s)
         return completed
@@ -368,13 +429,15 @@ class _PagedSlots:
     in leading axes — ``api.copy_pool_page`` locates the page axis from
     the trailing layout)."""
 
-    def _init_pool(self, n_slots, max_seq, page_size, n_pages):
+    def _init_pool(self, n_slots, max_seq, page_size, n_pages,
+                   obs=None, pool_name="paging"):
         from repro.serve.paging import PagePool
 
         if n_pages is None:
             n_pages = _default_n_pages(n_slots, max_seq, page_size)
         self.pool = PagePool(
-            n_pages, page_size, n_slots=n_slots, max_seq=max_seq
+            n_pages, page_size, n_slots=n_slots, max_seq=max_seq,
+            obs=obs, name=pool_name,
         )
 
     def begin_slot(self, slot, tokens, *, share=True):
@@ -418,7 +481,8 @@ class EngineBackend(_PagedSlots):
     ``paged=False`` keeps the dense slot cache as the parity oracle."""
 
     def __init__(self, cfg, params, programs, sample, *, n_slots, max_seq,
-                 stats=None, paged=None, page_size: int = 16, n_pages=None):
+                 prefill_counter=None, paged=None, page_size: int = 16,
+                 n_pages=None, obs=None, pool_name="paging"):
         assert not cfg.is_encoder
         self.cfg = cfg
         self.params = params
@@ -426,13 +490,16 @@ class EngineBackend(_PagedSlots):
         self._chunk = getattr(programs, "prefill_chunk", None)
         self._reset = getattr(programs, "reset_slot", None)
         self._sample = sample
-        self._stats = stats
+        # the owning engine's ``engine.prefill_tokens`` counter (legacy
+        # engine.stats credit for chunked prefills); None outside an engine
+        self._prefill_counter = prefill_counter
         self.E = 1
         self.paged = api.supports_paging(cfg) if paged is None else bool(paged)
         if self.paged:
             from repro.serve.engine import paged_model_programs
 
-            self._init_pool(n_slots, max_seq, page_size, n_pages)
+            self._init_pool(n_slots, max_seq, page_size, n_pages,
+                            obs=obs, pool_name=pool_name)
             self.pool_dev, _ = unbox(
                 api.init_paged_pool(cfg, self.pool.n_pages, page_size)
             )
@@ -473,8 +540,8 @@ class EngineBackend(_PagedSlots):
                 self.params, jnp.asarray(tokens), self.cache,
                 jnp.int32(slot), jnp.int32(start),
             )
-        if self._stats is not None:
-            self._stats["prefill_tokens"] += len(tokens)
+        if self._prefill_counter is not None:
+            self._prefill_counter.add(len(tokens))
 
     def reset_slot(self, slot):
         """Zero the slot's constant-state leaves (no-op for pos-masked
@@ -502,7 +569,8 @@ class TierBackend(_PagedSlots):
     an E-fold HBM saving (the ABC-specific win — see DESIGN.md §10)."""
 
     def __init__(self, tier, *, n_slots, max_seq, seed: int = 0,
-                 paged=None, page_size: int = 16, n_pages=None):
+                 paged=None, page_size: int = 16, n_pages=None,
+                 obs=None, pool_name="paging"):
         assert not tier.cfg.is_encoder
         self.tier = tier
         self.E = tier.k
@@ -515,7 +583,8 @@ class TierBackend(_PagedSlots):
         if self.paged:
             from repro.serve.cascade_server import tier_paged_programs
 
-            self._init_pool(n_slots, max_seq, page_size, n_pages)
+            self._init_pool(n_slots, max_seq, page_size, n_pages,
+                            obs=obs, pool_name=pool_name)
             pool0, _ = unbox(
                 api.init_paged_pool(tier.cfg, self.pool.n_pages, page_size)
             )

@@ -68,6 +68,7 @@ from typing import List, Optional
 import jax
 
 from repro.core.cost_model import EDGE_DELAYS
+from repro.obs import perf_clock
 
 
 def tree_bytes(tree) -> int:
@@ -125,9 +126,10 @@ class SendHandle:
         """The delivered payload tree; blocks until the hop completes and
         charges the blocked time to ``wait_time``/``Transport.total_wait``."""
         if not self._resolved:
-            t0 = time.perf_counter()
+            clock = self._transport._clock
+            t0 = clock()
             self._value = self._future.result()
-            self.wait_time = time.perf_counter() - t0
+            self.wait_time = clock() - t0
             self._transport._waited(self.wait_time)
             self._resolved = True
             self._future = None
@@ -153,6 +155,26 @@ class Transport:
         self.hops: List[Hop] = []
         self.total_wait = 0.0  # seconds callers blocked in SendHandle.result
         self._wait_lock = threading.Lock()
+        # injectable wait clock (DESIGN.md §11 / abclint ABC601); link
+        # physics (the token bucket's time.monotonic) stays real wall-clock
+        self._clock = perf_clock
+        self._obs_c = None  # optional mirrored registry counters
+
+    def attach_obs(self, obs, name: str):
+        """Mirror this link's hop metering into ``obs``'s registry under
+        ``transport.{name}.*`` (hops / bytes / examples / latency_s /
+        wait_s).  The legacy ``stats()`` dict and hop list stay the source
+        of truth; the registry mirror is what the unified exporter reads."""
+        sc = obs.scope(f"transport.{name}")
+        self._clock = obs.clock
+        self._obs_c = (
+            sc.counter("hops"),
+            sc.counter("bytes"),
+            sc.counter("examples"),
+            sc.counter("latency_s"),
+            sc.counter("wait_s"),
+        )
+        return self
 
     # -- link physics (overridden) ----------------------------------------
     def _latency(self, payload_bytes: int) -> float:
@@ -164,6 +186,8 @@ class Transport:
     def _waited(self, seconds: float):
         with self._wait_lock:
             self.total_wait += seconds
+        if self._obs_c is not None:
+            self._obs_c[4].add(seconds)
 
     # -- public API ---------------------------------------------------------
     def send(self, src: str, dst: str, tree, *, n_examples: Optional[int] = None):
@@ -188,6 +212,12 @@ class Transport:
         n = int(n_examples) if n_examples is not None else 0
         hop = Hop(src, dst, n, b, self._latency(b))
         self.hops.append(hop)
+        if self._obs_c is not None:
+            c_hops, c_bytes, c_examples, c_latency, _ = self._obs_c
+            c_hops.add(1)
+            c_bytes.add(b)
+            c_examples.add(n)
+            c_latency.add(hop.latency)
         return hop
 
     def reset(self):

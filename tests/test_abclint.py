@@ -213,7 +213,7 @@ def test_abc302_clean_sorted_set(tmp_path):
 
 
 def test_abc303_wall_clock_and_seed_free_rng(tmp_path):
-    findings = lint_fixture(tmp_path, "src/repro/serve/dx.py", """
+    findings = lint_fixture(tmp_path, "src/repro/core/dx.py", """
         import time
         import numpy as np
 
@@ -227,7 +227,10 @@ def test_abc303_wall_clock_and_seed_free_rng(tmp_path):
 
 
 def test_abc303_clean_metering_clock_and_seeded_rng(tmp_path):
-    findings = lint_fixture(tmp_path, "src/repro/serve/dx.py", """
+    # perf_counter is the blessed metering clock for ABC303; in serve/ it
+    # would additionally trip ABC601 (injectable-clock discipline), so the
+    # fixture lives in core/
+    findings = lint_fixture(tmp_path, "src/repro/core/dx.py", """
         import time
         import numpy as np
 
@@ -464,6 +467,86 @@ def test_pragma_wrong_rule_does_not_suppress(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# pass 6 — telemetry discipline
+# ---------------------------------------------------------------------------
+
+
+def test_abc601_raw_perf_counter_in_serve(tmp_path):
+    findings = lint_fixture(tmp_path, "src/repro/serve/mx.py", """
+        import time
+
+        def step(self):
+            t0 = time.perf_counter()
+            return time.perf_counter() - t0
+    """)
+    assert rules_of(findings) == ["ABC601", "ABC601"]
+
+
+def test_abc601_clean_injected_clock_and_link_physics(tmp_path):
+    # holding the clock FUNCTION (assignment) and calling through it is the
+    # blessed pattern; time.monotonic/time.sleep are transport link physics
+    findings = lint_fixture(tmp_path, "src/repro/serve/mx.py", """
+        import time
+
+        from repro.obs import perf_clock
+
+        class C:
+            def __init__(self, obs):
+                self._clock = obs.clock if obs else perf_clock
+
+            def step(self):
+                t0 = self._clock()
+                time.sleep(0.0)
+                now = time.monotonic()
+                return self._clock() - t0, now
+    """)
+    assert findings == []
+
+
+def test_abc601_out_of_scope_outside_serve(tmp_path):
+    findings = lint_fixture(tmp_path, "src/repro/core/mx.py", """
+        import time
+
+        def bench():
+            return time.perf_counter()
+    """)
+    assert findings == []
+
+
+def test_abc602_stats_dict_mutation(tmp_path):
+    findings = lint_fixture(tmp_path, "src/repro/serve/mx.py", """
+        class C:
+            def __init__(self):
+                self.stats = {"n": 0}
+                self._stats = {"m": 0}
+
+            def step(self, stats):
+                self.stats["n"] += 1
+                self._stats["m"] = 5
+                stats["k"] = 2
+    """)
+    assert rules_of(findings) == ["ABC602", "ABC602", "ABC602"]
+
+
+def test_abc602_clean_registry_and_plain_dicts(tmp_path):
+    # registry metrics and unrelated dicts stay silent — only stats-named
+    # subscript targets are the legacy surface
+    findings = lint_fixture(tmp_path, "src/repro/serve/mx.py", """
+        class C:
+            def __init__(self, sc):
+                self._c = sc.counter("n")
+                self.table = {}
+
+            def step(self, r):
+                self._c.add(1)
+                self.table[r] = 1
+                view = self.table["x"] if "x" in self.table else None
+                return view
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
 # baseline mechanics
 # ---------------------------------------------------------------------------
 
@@ -567,7 +650,7 @@ def test_cli_json_report(capsys):
     report = json.loads(capsys.readouterr().out)
     assert report["findings"] == []
     assert report["stale_baseline"] == []
-    assert report["summary"]["baselined"] == 2
+    assert report["summary"]["baselined"] == 1
 
 
 def test_baseline_guard_shrink_only(tmp_path, capsys):

@@ -1,0 +1,252 @@
+"""Per-request Perfetto tracing tests (DESIGN.md §11).
+
+(a) tracer unit behaviour under a FAKE clock: deterministic microsecond
+    timestamps, track metadata, the span vocabulary;
+(b) ``validate_trace`` negative cases: malformed events, non-monotone
+    track timestamps, mis-nested / unclosed spans, a request that
+    vanishes mid-cascade;
+(c) the tier-1 integration contract: a two-tier cascade over a real
+    ``AsyncTransport`` link emits a schema-valid trace in which EVERY
+    admitted request reaches a terminal event, hops carry the
+    hidden-vs-blocked overlap split, and the whole serve runs under
+    ``jax.transfer_guard_device_to_host("disallow")`` — recording never
+    adds a device→host sync.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import ensemble as ens
+from repro.core.cascade import TierSpec
+from repro.models.params import unbox
+from repro.obs import (
+    Observability,
+    REQUEST_PID,
+    Tracer,
+    validate_trace,
+)
+from repro.serve import CascadeServer, CascadeTier, Request, edge_cloud
+
+SMALL = ModelConfig(
+    name="otr-s", family="dense", n_layers=2, d_model=64, d_ff=128,
+    vocab_size=64, n_heads=4, n_kv_heads=2, remat=False,
+)
+BIG = ModelConfig(
+    name="otr-b", family="dense", n_layers=3, d_model=96, d_ff=192,
+    vocab_size=64, n_heads=4, n_kv_heads=4, remat=False,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        self.t += 0.001
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# (a) tracer unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_deterministic_under_fake_clock():
+    tr = Tracer(clock=FakeClock())
+    tr.begin(7, "queue_wait", stream="s")
+    tr.end(7, "queue_wait")
+    tr.instant(7, "complete", tier=0)
+    evs = tr.export()["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert meta[0]["name"] == "process_name"
+    assert any(e["name"] == "thread_name" and e["tid"] == 7 for e in meta)
+    b, e, i = [ev for ev in evs if ev["ph"] in ("B", "E", "i")]
+    # the fake clock ticks 1ms per read; ts is µs from tracer construction
+    assert b["ts"] == pytest.approx(1000.0)
+    assert e["ts"] == pytest.approx(2000.0)
+    assert i["ts"] == pytest.approx(3000.0)
+    assert b["pid"] == e["pid"] == i["pid"] == REQUEST_PID
+    assert i["s"] == "t" and i["args"] == {"tier": 0}
+    assert tr.export()["displayTimeUnit"] == "ms"
+
+
+def test_tracer_track_metadata_idempotent():
+    tr = Tracer(clock=FakeClock())
+    tr.begin(1, "a")
+    tr.end(1, "a")
+    tr.begin(1, "b")
+    tr.end(1, "b")
+    names = [
+        e for e in tr.export()["traceEvents"]
+        if e["ph"] == "M" and e["name"] == "thread_name"
+    ]
+    assert len(names) == 1
+
+
+def test_write_and_validate_roundtrip(tmp_path):
+    import json
+
+    tr = Tracer(clock=FakeClock())
+    tr.begin(1, "decode")
+    tr.end(1, "decode")
+    tr.instant(1, "complete")
+    path = tmp_path / "trace.json"
+    tr.write(str(path))
+    loaded = json.loads(path.read_text())
+    summ = validate_trace(loaded)
+    assert summ["tracks"] == 1 and summ["spans"] == 1
+
+
+# ---------------------------------------------------------------------------
+# (b) validator negative cases
+# ---------------------------------------------------------------------------
+
+
+def _track(events):
+    return {"traceEvents": events}
+
+
+def _ev(ph, name, ts, **kw):
+    ev = {"ph": ph, "pid": 1, "tid": 1, "name": name, "ts": ts, "cat": "serve"}
+    if ph == "i":
+        ev["s"] = "t"
+    ev.update(kw)
+    return ev
+
+
+def test_validator_rejects_non_monotone_timestamps():
+    with pytest.raises(AssertionError, match="non-monotone"):
+        validate_trace(_track([
+            _ev("B", "a", 10.0), _ev("E", "a", 5.0),
+            _ev("i", "complete", 6.0),
+        ]))
+
+
+def test_validator_rejects_mismatched_span_end():
+    with pytest.raises(AssertionError, match="does not close"):
+        validate_trace(_track([
+            _ev("B", "a", 1.0), _ev("B", "b", 2.0), _ev("E", "a", 3.0),
+        ]))
+
+
+def test_validator_rejects_unclosed_span():
+    with pytest.raises(AssertionError, match="unclosed"):
+        validate_trace(_track([
+            _ev("B", "a", 1.0), _ev("i", "complete", 2.0),
+        ]))
+
+
+def test_validator_rejects_end_without_begin():
+    with pytest.raises(AssertionError, match="E without open span"):
+        validate_trace(_track([_ev("E", "a", 1.0)]))
+
+
+def test_validator_requires_terminal_event():
+    with pytest.raises(AssertionError, match="vanished"):
+        validate_trace(_track([_ev("B", "a", 1.0), _ev("E", "a", 2.0)]))
+    # opt-out for partial traces
+    summ = validate_trace(
+        _track([_ev("B", "a", 1.0), _ev("E", "a", 2.0)]),
+        require_terminal=False,
+    )
+    assert summ["spans"] == 1
+
+
+def test_validator_rejects_malformed_events():
+    with pytest.raises(AssertionError):
+        validate_trace({"events": []})  # wrong wrapping
+    with pytest.raises(AssertionError):
+        validate_trace(_track([{"ph": "B", "pid": 1}]))  # no name/tid/ts
+
+
+# ---------------------------------------------------------------------------
+# (c) two-tier cascade over AsyncTransport: the tier-1 contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def stacks():
+    v1, _ = unbox(ens.init_ensemble(SMALL, 3, jax.random.PRNGKey(0)))
+    v2, _ = unbox(ens.init_ensemble(BIG, 1, jax.random.PRNGKey(1)))
+    return v1, v2
+
+
+def test_cascade_trace_end_to_end(stacks):
+    v1, v2 = stacks
+    server = CascadeServer(
+        [
+            CascadeTier(SMALL, v1, TierSpec("t1", "vote", 0.67, k=3, cost=1.0)),
+            CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1,
+                                          cost=50.0)),
+        ],
+        placement=edge_cloud(delay=0.02, link="async"),
+    )
+    rng = np.random.default_rng(6)
+    reqs = [
+        Request(tokens=rng.integers(0, 64, 8).astype(np.int32),
+                max_new_tokens=5)
+        for _ in range(6)
+    ]
+    rids = {r.rid for r in reqs}
+    ob = Observability(tracer=Tracer())
+    with jax.transfer_guard_device_to_host("disallow"):
+        done = server.serve_continuous(reqs, n_slots=2, max_seq=32, obs=ob)
+    assert len(done) == len(reqs)
+
+    trace = ob.tracer.export()
+    summ = validate_trace(trace)  # schema + nesting + terminal per track
+    evs = trace["traceEvents"]
+    lifecycle = [e for e in evs if e["ph"] != "M"]
+    # every admitted request has a track, and no extra tracks appear
+    assert {e["tid"] for e in lifecycle} == rids
+    assert summ["tracks"] == len(reqs)
+
+    # every request that crossed the link shows the hop overlap split
+    hop_ends = [e for e in lifecycle if e["name"] == "hop" and e["ph"] == "E"]
+    n_deferred = ob.registry.value("cascade.tier0.deferred")
+    assert len(hop_ends) == n_deferred > 0
+    for e in hop_ends:
+        args = e["args"]
+        assert set(args) == {"link_s", "blocked_s", "hidden_s"}
+        assert args["link_s"] == pytest.approx(
+            args["blocked_s"] + args["hidden_s"], abs=1e-6,
+        ) or args["blocked_s"] > args["link_s"]  # contention can over-block
+    hop_begins = [e for e in lifecycle
+                  if e["name"] == "hop" and e["ph"] == "B"]
+    assert all(
+        {"src", "dst", "n_bytes"} <= set(e["args"]) for e in hop_begins
+    )
+
+    # span vocabulary: each track walks the lifecycle in order
+    for r in done:
+        names = [e["name"] for e in lifecycle if e["tid"] == r.rid]
+        spans = [e["name"] for e in lifecycle
+                 if e["tid"] == r.rid and e["ph"] == "B"]
+        assert names[0] == "queue_wait"
+        assert "admit" in spans and "decode" in spans
+        assert names[-1] == "complete"
+        assert names.index("defer_vote") > names.index("decode")
+        if r.tier == 1:  # deferred: a hop and a second tier's admission
+            assert "hop" in spans
+            assert spans.count("admit") == 2
+            assert spans.count("queue_wait") == 2
+
+    # deferral accounting matches the per-request outcomes
+    assert ob.registry.value("cascade.tier1.answered") == sum(
+        r.tier == 1 for r in done
+    )
+
+
+def test_null_tracer_emits_nothing(stacks):
+    v1, _ = stacks
+    server = CascadeServer(
+        [CascadeTier(SMALL, v1, TierSpec("t1", "vote", 0.0, k=3, cost=1.0))]
+    )
+    ob = Observability()  # NullTracer
+    done = server.serve_continuous(
+        [Request(tokens=np.arange(1, 9, dtype=np.int32), max_new_tokens=3)],
+        n_slots=1, max_seq=32, obs=ob,
+    )
+    assert len(done) == 1
+    assert ob.tracer.export() == {"traceEvents": []}

@@ -1,4 +1,4 @@
-"""The five abclint passes (DESIGN.md §9).  ``ALL_PASSES`` is the
+"""The six abclint passes (DESIGN.md §9).  ``ALL_PASSES`` is the
 registry the CLI and the tests run; adding a rule means adding it to a
 pass module's ``RULES`` table and its checker, nothing else."""
 from __future__ import annotations
@@ -9,6 +9,7 @@ from tools.abclint.passes import (
     kernel_contract,
     memory,
     retrace,
+    telemetry,
 )
 
 ALL_PASSES = (
@@ -17,6 +18,7 @@ ALL_PASSES = (
     determinism.PASS,
     kernel_contract.PASS,
     memory.PASS,
+    telemetry.PASS,
 )
 
 #: every known rule id -> description (including the engine's pragma rules)

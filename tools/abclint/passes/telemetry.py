@@ -1,0 +1,101 @@
+"""Pass 6 — telemetry discipline (ABC6xx).
+
+DESIGN.md §11 centralizes serving observability in ``repro.obs``: metrics
+live in a ``MetricsRegistry`` behind read-only ``StatsView`` facades, and
+every serve-side timestamp goes through the injectable ``obs.clock``.  Two
+regressions would silently unwind that unification, and both are purely
+syntactic — so they are linted, not reviewed:
+
+ABC601  a raw ``time.perf_counter()`` CALL in ``serve/``.  Components must
+        hold the injectable clock (``self._clock = obs.clock`` — an
+        attribute assignment, which this rule ignores) and call through it,
+        so tests can drive deterministic timestamps and traces.
+        ``time.time`` is already ABC303's business (determinism), and
+        ``time.monotonic``/``time.sleep`` are exempt here: they are the
+        transport token bucket's LINK PHYSICS (real wire occupancy), not
+        telemetry timestamps.
+
+ABC602  mutating a stats dict in place (``...stats["k"] += v`` or
+        ``...stats["k"] = v`` where the subscripted base is named
+        ``stats``/``_stats``/``last_stream_stats``).  The registry is the
+        single source of truth; legacy ``stats`` surfaces are read-only
+        ``StatsView``s over it.  A new ad-hoc accumulator belongs in a
+        ``Counter``/``Gauge``/``Histogram`` on the component's scope.
+
+Scope: ``src/repro/serve/`` — ``repro.obs`` itself lives outside it, so
+the one place allowed to touch clocks and raw metric state is structurally
+out of scope.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.abclint import astutil
+from tools.abclint.engine import FileContext, Finding, Pass
+
+RULES = {
+    "ABC601": "raw wall-clock call in serve/ (hold obs.clock and call "
+              "through it — injectable time, DESIGN.md §11)",
+    "ABC602": "in-place stats-dict mutation in serve/ (stats views are "
+              "read-only; record into a registry metric instead)",
+}
+
+#: wall-clock calls that must go through the injectable obs.clock
+_CLOCK_CALLS = ("time.perf_counter",)
+#: subscripted base names that mark a legacy stats surface
+_STATS_NAMES = ("stats", "_stats", "last_stream_stats")
+
+
+def in_scope(relpath: str) -> bool:
+    return relpath.startswith("src/repro/serve/")
+
+
+def _stats_subscript(node: ast.AST) -> bool:
+    """``<base>.stats[...]`` / ``stats[...]`` with a stats-ish base name."""
+    if not isinstance(node, ast.Subscript):
+        return False
+    base = node.value
+    if isinstance(base, ast.Attribute):
+        return base.attr in _STATS_NAMES
+    if isinstance(base, ast.Name):
+        return base.id in _STATS_NAMES
+    return False
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            d = astutil.call_name(node)
+            if d is not None and (
+                d in _CLOCK_CALLS
+                or d.split(".")[-1] in ("perf_counter",)
+            ):
+                findings.append(
+                    ctx.finding(
+                        "ABC601", node,
+                        f"{d}() bypasses the injectable clock — hold "
+                        "``self._clock = obs.clock`` and call through it",
+                    )
+                )
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for t in targets:
+                if _stats_subscript(t):
+                    findings.append(
+                        ctx.finding(
+                            "ABC602", node,
+                            "stats dicts are read-only StatsViews over the "
+                            "registry — add a Counter/Gauge/Histogram to "
+                            "the component's obs scope instead",
+                        )
+                    )
+    return findings
+
+
+PASS = Pass(
+    name="telemetry", rules=RULES, check_file=check_file, scope=in_scope
+)

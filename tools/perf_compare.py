@@ -24,12 +24,31 @@ Rows whose BASELINE derived column carries a ``gate=off`` tag (e.g. the
 interpret-mode starts sweeps, whose wall clock swings several-x on shared
 runners) must still be present and non-NaN but their timing is
 informational only.
+
+Derived KEYS gate too: every ``k=v`` key in a baseline row's derived
+column must still appear in the current run's derived column — that is
+how the registry-backed report fields (``serve.request_latency_s.p50_ms``
+and friends) are pinned: a bench that silently stops emitting them fails
+here, not in review.  DESIGN.md §11 renamed the old unnamespaced stats
+keys (``admit_ms``, ``hop_bytes``, ...) to fully-qualified registry metric
+names; ``NAME_MAP`` translates old→new so committed baselines keep gating
+without a refresh.
 """
 import argparse
 import glob
 import json
 import os
 import sys
+
+#: old unnamespaced derived keys -> fully-qualified registry metric names
+#: (DESIGN.md §11).  A baseline key found here is satisfied by the new name.
+NAME_MAP = {
+    "admit_ms": "slot_stream.admit_ms",
+    "paged_peak_pages": "paging.pool_occupancy.peak",
+    "efold_prefix_saved_mb": "paging.shared_prefix_saved_mb",
+    "link_time_hidden_ms": "transport.edge0_cloud0.hidden_ms",
+    "hop_bytes": "transport.loopback.bytes",
+}
 
 CELLS = [
     ("llama4-maverick-400b-a17b", "decode_32k"),
@@ -66,6 +85,15 @@ def roofline_table():
         print(f"| {arch} × {shape} | {cell('t_compute_s')} | {cell('t_memory_s')} | {cell('t_collective_s')} |")
 
 
+def derived_keys(derived):
+    """``k=v;k2=v2`` -> {k, k2} (the ``gate`` tag is control, not data)."""
+    return {
+        kv.split("=", 1)[0]
+        for kv in str(derived).split(";")
+        if "=" in kv and kv.split("=", 1)[0] != "gate"
+    }
+
+
 def compare_bench(bench_path, baseline_path, max_regression, slack_us):
     cur = json.load(open(bench_path))
     base = json.load(open(baseline_path))
@@ -86,6 +114,17 @@ def compare_bench(bench_path, baseline_path, max_regression, slack_us):
             failures.append(f"{name}: current run is NaN (bench errored)")
             print(f"{name:46s} {b_us:12.1f} {'nan':>12s}")
             continue
+        cur_keys = derived_keys(c.get("derived", ""))
+        lost = {
+            k for k in derived_keys(base_rows[name].get("derived", ""))
+            if k not in cur_keys and NAME_MAP.get(k) not in cur_keys
+        }
+        if lost:
+            failures.append(
+                f"{name}: derived keys vanished from the current run: "
+                f"{sorted(lost)} (registry-backed report fields gate on "
+                "presence; see NAME_MAP for renames)"
+            )
         r = c_us / b_us if b_us else float("inf")
         if "gate=off" in base_rows[name].get("derived", ""):
             print(f"{name:46s} {b_us:12.1f} {c_us:12.1f} {r:7.2f}  (gate=off)")
