@@ -228,6 +228,53 @@ def run(verbose=True):
     efold_saved_mb = shared_hits * page_bytes / 1e6
     efold_saved_1plane_mb = efold_saved_mb / E
 
+    # --- open-loop load-adaptive serving A/B (DESIGN.md §12) ---------------
+    # identical bursty trace, identical HBM budget, virtual time (the whole
+    # A/B replays bit-for-bit): static ServeConfig vs the same config with
+    # the greedy controller actuating theta offsets / slot caps / shedding.
+    # The acceptance gate is strict: controller-on goodput must EXCEED the
+    # static baseline's, and offered == completed + shed on both sides
+    # (shed requests come back marked, never silently dropped).
+    from repro.serve import (
+        ControllerConfig,
+        GreedyController,
+        ServeConfig,
+        bursty,
+    )
+
+    # NOT trimmed in smoke mode: the A/B needs the full burst structure to
+    # saturate the static config (a shorter trace never backs up, static
+    # hits goodput 1.0, and the strict-win gate has nothing to beat); the
+    # run is virtual-time, so the cost is model steps only
+    ol_n = 80
+    ol_wl = bursty(2.0, 300.0, ol_n, seed=7, mean_on_s=0.5, mean_off_s=0.5,
+                   prompt_len=(4, 12), max_new_tokens=(2, 5))
+    ol_cfg = ServeConfig(n_slots=4, max_seq=64)
+    ol_slo_s = 0.3
+
+    def _ol_server():
+        # fresh server per arm: each run owns a fresh registry/virtual
+        # clock, so the arms cannot leak telemetry into each other
+        return CascadeServer([
+            CascadeTier(SMALL, v1, TierSpec("t1", "vote", 0.67, k=3, cost=1.0)),
+            CascadeTier(BIG, v2, TierSpec("t2", "confidence", -1.0, k=1,
+                                          cost=30.0)),
+        ])
+
+    ol_static = _ol_server().serve_open_loop(
+        ol_wl, ol_cfg, slo_s=ol_slo_s, step_time_s=0.01
+    )
+    ol_ctl = GreedyController(ControllerConfig(interval_s=0.1))
+    ol_adaptive = _ol_server().serve_open_loop(
+        ol_wl, ol_cfg, slo_s=ol_slo_s, step_time_s=0.01, controller=ol_ctl
+    )
+    assert ol_static.offered == ol_adaptive.offered == ol_n
+    for rep in (ol_static, ol_adaptive):
+        assert len(rep.completed) + len(rep.shed) == ol_n, rep
+        assert all(r.shed and r.output is None for r in rep.shed)
+    assert ol_adaptive.goodput > ol_static.goodput, (ol_adaptive, ol_static)
+    assert ol_ctl.actions, "controller never actuated on a bursty trace"
+
     # --- overlapped cross-host continuous serving (DESIGN.md §8) -----------
     # the shared harness (benchmarks/common.py measure_overlap) asserts the
     # equivalence contract; this bench only reports the ratio — the hard
@@ -305,6 +352,12 @@ def run(verbose=True):
               f"requests): p50 {lat_p50_ms:.0f}ms, p99 {lat_p99_ms:.0f}ms; "
               f"{n_deferred} deferred, {link_bytes} B over link"
               + (f"; Perfetto trace -> {trace_path}" if trace_path else ""))
+        print(f"# open-loop ({ol_n} bursty arrivals @ SLO {ol_slo_s*1e3:.0f}ms "
+              f"virtual): goodput {ol_static.goodput:.3f} static -> "
+              f"{ol_adaptive.goodput:.3f} controller-on "
+              f"({len(ol_ctl.actions)} actions, {len(ol_adaptive.shed)} shed "
+              f"marked); p50 {ol_adaptive.p50_s*1e3:.0f}ms, "
+              f"p99 {ol_adaptive.p99_s*1e3:.0f}ms")
     assert retraced == 0, "steady-state classify must not retrace"
     # derived keys that read a stats surface carry the surface's
     # fully-qualified registry name (DESIGN.md §11) — tools/perf_compare.py
@@ -337,4 +390,19 @@ def run(verbose=True):
         f"{int(reg.value('slot_stream.tier0.decode_tokens'))};"
         f"gate=off",
     )
-    return row + "\n" + row_obs
+    # open-loop A/B row (DESIGN.md §12): the us column is controller-on p50
+    # VIRTUAL latency (deterministic, but model step cost is hardware-
+    # relative) — gate=off, the hard gate is the asserted strict goodput
+    # win above plus derived-key presence.  goodput = SLO-attainment
+    # fraction: completed-within-SLO / offered.
+    row_ol = csv_row(
+        "serving_open_loop", ol_adaptive.p50_s * 1e6,
+        f"goodput_ctl={ol_adaptive.goodput:.3f};"
+        f"goodput_static={ol_static.goodput:.3f};"
+        f"serve.request_latency_s.p50_ms={ol_adaptive.p50_s*1e3:.1f};"
+        f"serve.request_latency_s.p99_ms={ol_adaptive.p99_s*1e3:.1f};"
+        f"controller_actions={len(ol_ctl.actions)};"
+        f"shed={len(ol_adaptive.shed)};offered={ol_adaptive.offered};"
+        f"gate=off",
+    )
+    return row + "\n" + row_obs + "\n" + row_ol

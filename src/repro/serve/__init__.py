@@ -1,8 +1,22 @@
 from repro.serve.batching import Request, RequestQueue
+from repro.serve.config import ServeConfig, resolve_serve_config
 from repro.serve.engine import ServingEngine
 from repro.serve.paging import PagePool
 from repro.serve.slot_stream import EngineBackend, SlotStream, TierBackend
-from repro.serve.cascade_server import CascadeServer, CascadeTier
+from repro.serve.cascade_server import (
+    CascadeServer,
+    CascadeTier,
+    OpenLoopReport,
+)
+from repro.serve.controller import ControllerConfig, GreedyController
+from repro.serve.workload import (
+    ArrivalSpec,
+    VirtualClock,
+    Workload,
+    bursty,
+    diurnal,
+    poisson,
+)
 from repro.serve.placement import (
     Host,
     TierPlacement,
@@ -24,6 +38,8 @@ from repro.serve.transport import (
 __all__ = [
     "Request",
     "RequestQueue",
+    "ServeConfig",
+    "resolve_serve_config",
     "ServingEngine",
     "SlotStream",
     "EngineBackend",
@@ -31,6 +47,15 @@ __all__ = [
     "PagePool",
     "CascadeServer",
     "CascadeTier",
+    "OpenLoopReport",
+    "ControllerConfig",
+    "GreedyController",
+    "ArrivalSpec",
+    "VirtualClock",
+    "Workload",
+    "poisson",
+    "bursty",
+    "diurnal",
     "Host",
     "TierPlacement",
     "single_host",

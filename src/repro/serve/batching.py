@@ -32,6 +32,10 @@ class Request:
     # full max_new_tokens budget was generated: ``output`` is short, not
     # silently complete.
     truncated: bool = False
+    # True when open-loop admission control rejected the request under
+    # overload: it still comes back to the caller (never silently dropped),
+    # with ``output=None`` and this flag set.
+    shed: bool = False
 
 
 _pow2_at_least = bucket_size  # canonical bucket helper lives in core.cascade

@@ -55,8 +55,10 @@ from repro.core.cascade import (
 from repro.models import api
 from repro.obs import Observability, UNIT_BUCKETS
 from repro.serve.batching import Request
+from repro.serve.config import UNSET, ServeConfig, resolve_serve_config
 from repro.serve.engine import _counted, grow_cache
 from repro.serve.slot_stream import SlotStream, TierBackend
+from repro.serve.workload import VirtualClock, Workload
 
 
 # ---------------------------------------------------------------------------
@@ -282,6 +284,219 @@ class CascadeTier:
         return np.stack(out, axis=2)  # (E, B, T)
 
 
+@dataclasses.dataclass
+class OpenLoopReport:
+    """What one ``CascadeServer.serve_open_loop`` run measured.
+
+    ``goodput`` is SLO-attainment: the fraction of OFFERED requests that
+    completed within ``slo_s`` of their arrival time — shed requests and
+    SLO misses both count against it, so admission control only helps by
+    making the requests it keeps finish on time.  ``completed + shed``
+    always partitions the offered trace (zero silent drops — asserted by
+    the driver); latency percentiles come from the run's
+    ``serve.request_latency_s`` registry histogram."""
+
+    offered: int
+    completed: List[Request]
+    shed: List[Request]
+    completed_in_slo: int
+    goodput: float
+    p50_s: float
+    p99_s: float
+    makespan_s: float
+    controller_actions: List[dict] = dataclasses.field(default_factory=list)
+
+    def __repr__(self):
+        return (
+            f"OpenLoopReport(offered={self.offered}, "
+            f"done={len(self.completed)}, shed={len(self.shed)}, "
+            f"goodput={self.goodput:.3f}, p50={self.p50_s:.4g}s, "
+            f"p99={self.p99_s:.4g}s, makespan={self.makespan_s:.4g}s)"
+        )
+
+
+class _CascadeRun:
+    """One serve run's machinery, shared verbatim by the closed-loop
+    (``serve_continuous``) and open-loop (``serve_open_loop``) drivers:
+    per-tier ``SlotStream``s over ``TierBackend``s, the vote/defer/complete
+    routing, cross-host hop metering, and the telemetry scopes.  The
+    drivers differ ONLY in when requests enter (up-front list vs
+    arrival-time admission) and how time advances (clock reads vs explicit
+    ``VirtualClock`` advances); everything a request experiences after
+    submission lives here, which is what makes closed- and open-loop
+    results comparable.
+
+    ``theta_offset`` is the online controller's deferral actuation point:
+    tier i defers on ``vote_frac <= clamp(spec.theta + theta_offset[i],
+    0, 1)``.  Offsets default to 0.0, and the zero-offset path evaluates
+    ``spec.theta`` unmodified — the static configuration is bitwise
+    identical to the pre-controller code."""
+
+    def __init__(self, server: "CascadeServer", cfg: ServeConfig,
+                 ob: Observability):
+        self.server = server
+        self.tiers = server.tiers
+        self.ob = ob
+        self.tr = ob.tracer
+        self.clk = ob.clock
+        self.h_lat = ob.registry.histogram("serve.request_latency_s")
+        self.hosts = server._host_names()
+        if server.placement is not None:
+            for i, link in enumerate(server.placement.links):
+                link.attach_obs(ob, f"{self.hosts[i]}_{self.hosts[i + 1]}")
+        n = len(self.tiers)
+        tier_sc = [ob.scope(f"cascade.tier{i}") for i in range(n)]
+        self.c_answered = [sc.counter("answered") for sc in tier_sc]
+        self.c_deferred = [sc.counter("deferred") for sc in tier_sc]
+        self.c_tokens = [sc.counter("output_tokens") for sc in tier_sc]
+        self.h_margin = [
+            sc.histogram("agreement_margin", buckets=UNIT_BUCKETS)
+            for sc in tier_sc
+        ]
+        self.theta_offset: List[float] = [0.0] * n
+        self.streams = [
+            SlotStream(
+                TierBackend(
+                    t, n_slots=cfg.n_slots, max_seq=cfg.max_seq,
+                    seed=cfg.seed + i, paged=cfg.paged,
+                    page_size=cfg.page_size, n_pages=cfg.n_pages,
+                    obs=ob, pool_name=f"paging.tier{i}",
+                ),
+                dataclasses.replace(cfg, obs=ob),
+                name=f"slot_stream.tier{i}",
+            )
+            for i, t in enumerate(self.tiers)
+        ]
+        self.t_start: dict = {}
+        self.done: List[Request] = []
+
+    # -- driver surface -----------------------------------------------------
+    def submit(self, requests: Sequence[Request], *, t0=None) -> None:
+        """Enqueue onto tier 0.  ``t0`` overrides the latency-clock origin
+        (open loop passes the ARRIVAL time, so queue wait before admission
+        counts against the SLO)."""
+        for r in requests:
+            self.t_start[r.rid] = self.clk() if t0 is None else t0
+        self.streams[0].submit(requests)
+
+    @property
+    def active(self) -> bool:
+        return any(st.active for st in self.streams)
+
+    @property
+    def runnable(self) -> bool:
+        return any(st.runnable for st in self.streams)
+
+    def block_on_inflight(self) -> None:
+        """Every stream idle but payloads still on the wire: block on the
+        oldest in-flight hop (the only legal wait — there is no compute
+        left to hide it behind)."""
+        next(st for st in self.streams if st.inflight).poll_inflight(
+            block=True
+        )
+
+    def effective_theta(self, i: int) -> float:
+        off = self.theta_offset[i]
+        th = self.tiers[i].spec.theta
+        return th if off == 0.0 else min(1.0, max(0.0, th + off))
+
+    def sweep(self) -> None:
+        """One round-robin pass: step every stream once, routing each
+        completed slot through its tier's vote.  Deferred re-queues land on
+        tier i+1 BEFORE its step in the same sweep — exactly the legacy
+        serve_continuous interleaving."""
+        for i, st in enumerate(self.streams):
+            for r, gen in st.step():
+                self._finish_slot(i, r, gen)
+
+    # -- vote / defer / complete --------------------------------------------
+    def _finish_slot(self, i: int, r: Request, gen: np.ndarray) -> None:
+        tier = self.tiers[i]
+        tr = self.tr
+        n_tiers = len(self.streams)
+        # abclint: disable=ABC203(gen is host-side — the backend fetched it; this is a host list of digests)
+        digests = np.asarray(
+            [stable_digest(gen[e]) for e in range(tier.k)],
+            np.int32,
+        )
+        out = deferral.vote_rule_from_preds(
+            jnp.asarray(digests[:, None]), self.effective_theta(i)
+        )
+        # one metered fetch per completed slot: the vote verdict
+        # and winning digest scalars (8 bytes)
+        defer_h, pred_h = host_fetch((out.defer[0], out.pred[0]))
+        defer = bool(defer_h) and i < n_tiers - 1
+        # agreement margin: the winning digest's vote share
+        # (1.0 = unanimous) — digests is a host array
+        vote_counts = np.unique(digests, return_counts=True)[1]
+        margin = float(vote_counts.max()) / tier.k
+        self.h_margin[i].record(margin)
+        if tr.enabled:
+            tr.instant(
+                r.rid, "defer_vote",
+                tier=i, margin=margin, defer=bool(defer_h),
+            )
+        if defer:
+            self.c_deferred[i].add(1)
+            placement = self.server.placement
+            link = placement.link(i) if placement is not None else None
+            if link is not None:
+                # cross-host re-queue: the prompt is the payload
+                # that actually crosses the boundary.  send_async
+                # meters the hop NOW; the handle resolves at a
+                # tier-(i+1) admission point, so this tier's
+                # remaining slots keep decoding over the hop
+                # abclint: disable=ABC203(r.tokens is the host prompt array — the payload is built host-side before the metered send)
+                payload = {"tokens": np.asarray(r.tokens, np.int32)}
+                hosts = self.hosts
+                if tr.enabled:
+                    tr.begin(
+                        r.rid, "hop",
+                        src=hosts[i], dst=hosts[i + 1],
+                        n_bytes=int(payload["tokens"].nbytes),
+                    )
+                handle = link.send_async(
+                    hosts[i], hosts[i + 1], payload, n_examples=1,
+                )
+                hop = link.hops[-1]  # metered at send time
+
+                def _land(delivered, r=r, handle=handle, hop=hop):
+                    r.tokens = np.asarray(
+                        delivered["tokens"], np.int32
+                    )
+                    if tr.enabled:
+                        # the hop span closes at delivery (on
+                        # the draining thread); its args carry
+                        # the overlap split — blocked is what
+                        # result() charged the caller, hidden
+                        # is the link time decode covered
+                        blocked = float(handle.wait_time)
+                        tr.end(
+                            r.rid, "hop",
+                            link_s=float(hop.latency),
+                            blocked_s=blocked,
+                            hidden_s=max(
+                                0.0, float(hop.latency) - blocked
+                            ),
+                        )
+                    return r
+
+                self.streams[i + 1].submit_inflight(handle, _land)
+            else:
+                self.streams[i + 1].submit([r])
+        else:
+            self.c_answered[i].add(1)
+            self.c_tokens[i].add(int(gen.shape[1]))
+            # abclint: disable=ABC202(argmax over the host digest array — pred_h fetched above)
+            winner = int(np.argmax(digests == pred_h))
+            r.output = gen[winner].astype(np.int32)
+            r.tier = i
+            self.h_lat.record(self.clk() - self.t_start[r.rid])
+            if tr.enabled:
+                tr.instant(r.rid, "complete", tier=i)
+            self.done.append(r)
+
+
 class CascadeServer:
     """The ABC serving runtime: a tier list + optional ``TierPlacement``.
 
@@ -381,15 +596,16 @@ class CascadeServer:
     def serve_continuous(
         self,
         requests: Sequence[Request],
+        config: Optional[ServeConfig] = None,
         *,
-        n_slots: int = 8,
-        max_seq: int = 256,
-        seed: int = 0,
-        chunked_prefill: bool = True,
-        paged=None,
-        page_size: int = 16,
-        n_pages=None,
-        obs: Optional[Observability] = None,
+        n_slots=UNSET,
+        max_seq=UNSET,
+        seed=UNSET,
+        chunked_prefill=UNSET,
+        paged=UNSET,
+        page_size=UNSET,
+        n_pages=UNSET,
+        obs=UNSET,
     ) -> List[Request]:
         """Continuous-batching generate mode: every tier runs a
         ``SlotStream`` (serve/slot_stream.py, the E=k instantiation of the
@@ -415,146 +631,164 @@ class CascadeServer:
         is absent — at ANY temperature: delivery timing only moves WHEN a
         request is re-admitted, never what its slot computes (greedy slots
         are rng-free; sampled slots draw from per-slot admission keys —
-        see ``_slot_sampler``)."""
+        see ``_slot_sampler``).
+
+        Tuning knobs arrive as a ``ServeConfig`` (``config=``) or as the
+        legacy kwargs (one deprecation pathway — serve/config.py); the
+        run machinery itself is ``_CascadeRun``, shared bitwise with
+        ``serve_open_loop``."""
+        cfg = resolve_serve_config(
+            config, "CascadeServer.serve_continuous",
+            n_slots=n_slots, max_seq=max_seq, seed=seed,
+            chunked_prefill=chunked_prefill, paged=paged,
+            page_size=page_size, n_pages=n_pages, obs=obs,
+        ).with_max_seq_default(256)
         for r in requests:
-            assert len(r.tokens) + r.max_new_tokens <= max_seq, (
+            assert len(r.tokens) + r.max_new_tokens <= cfg.max_seq, (
                 f"request {r.rid}: prompt+budget "
-                f"{len(r.tokens)}+{r.max_new_tokens} exceeds max_seq={max_seq}"
+                f"{len(r.tokens)}+{r.max_new_tokens} exceeds "
+                f"max_seq={cfg.max_seq}"
             )
         # telemetry (DESIGN.md §11): one bundle spans every tier's stream,
         # pool, and placement link — pass ``obs`` to get a unified registry
         # namespace and (with an enabled tracer) the per-request lifecycle
         # trace; the default private bundle keeps legacy behaviour
-        ob = obs if obs is not None else Observability.private()
-        tr = ob.tracer
-        clk = ob.clock
-        h_lat = ob.registry.histogram("serve.request_latency_s")
-        hosts = self._host_names()
-        if self.placement is not None:
-            for i, link in enumerate(self.placement.links):
-                link.attach_obs(ob, f"{hosts[i]}_{hosts[i + 1]}")
-        tier_sc = [ob.scope(f"cascade.tier{i}") for i in range(len(self.tiers))]
-        c_answered = [sc.counter("answered") for sc in tier_sc]
-        c_deferred = [sc.counter("deferred") for sc in tier_sc]
-        c_tokens = [sc.counter("output_tokens") for sc in tier_sc]
-        h_margin = [
-            sc.histogram("agreement_margin", buckets=UNIT_BUCKETS)
-            for sc in tier_sc
-        ]
-        streams = [
-            SlotStream(
-                TierBackend(
-                    t, n_slots=n_slots, max_seq=max_seq, seed=seed + i,
-                    paged=paged, page_size=page_size, n_pages=n_pages,
-                    obs=obs, pool_name=f"paging.tier{i}",
-                ),
-                n_slots=n_slots, max_seq=max_seq,
-                chunked_prefill=chunked_prefill,
-                obs=obs, name=f"slot_stream.tier{i}",
-            )
-            for i, t in enumerate(self.tiers)
-        ]
-        t_submit = {r.rid: clk() for r in requests}
-        streams[0].submit(requests)
-        done: List[Request] = []
-        n_tiers = len(streams)
-
-        while any(st.active for st in streams):
-            if not any(st.runnable for st in streams):
-                # every stream idle but payloads still on the wire: block
-                # on the oldest in-flight hop (the only legal wait — there
-                # is no compute left to hide it behind)
-                next(st for st in streams if st.inflight).poll_inflight(
-                    block=True
-                )
+        run = _CascadeRun(self, cfg, cfg.resolved_obs())
+        run.submit(requests)
+        while run.active:
+            if not run.runnable:
+                run.block_on_inflight()
                 continue
-            for i, st in enumerate(streams):
-                tier = st.backend.tier
-                for r, gen in st.step():
-                    # abclint: disable=ABC203(gen is host-side — the backend fetched it; this is a host list of digests)
-                    digests = np.asarray(
-                        [stable_digest(gen[e]) for e in range(tier.k)],
-                        np.int32,
-                    )
-                    out = deferral.vote_rule_from_preds(
-                        jnp.asarray(digests[:, None]), tier.spec.theta
-                    )
-                    # one metered fetch per completed slot: the vote verdict
-                    # and winning digest scalars (8 bytes)
-                    defer_h, pred_h = host_fetch((out.defer[0], out.pred[0]))
-                    defer = bool(defer_h) and i < n_tiers - 1
-                    # agreement margin: the winning digest's vote share
-                    # (1.0 = unanimous) — digests is a host array
-                    vote_counts = np.unique(digests, return_counts=True)[1]
-                    margin = float(vote_counts.max()) / tier.k
-                    h_margin[i].record(margin)
-                    if tr.enabled:
-                        tr.instant(
-                            r.rid, "defer_vote",
-                            tier=i, margin=margin, defer=bool(defer_h),
-                        )
-                    if defer:
-                        c_deferred[i].add(1)
-                        link = (
-                            self.placement.link(i)
-                            if self.placement is not None else None
-                        )
-                        if link is not None:
-                            # cross-host re-queue: the prompt is the payload
-                            # that actually crosses the boundary.  send_async
-                            # meters the hop NOW; the handle resolves at a
-                            # tier-(i+1) admission point, so this tier's
-                            # remaining slots keep decoding over the hop
-                            # abclint: disable=ABC203(r.tokens is the host prompt array — the payload is built host-side before the metered send)
-                            payload = {"tokens": np.asarray(r.tokens, np.int32)}
-                            if tr.enabled:
-                                tr.begin(
-                                    r.rid, "hop",
-                                    src=hosts[i], dst=hosts[i + 1],
-                                    n_bytes=int(payload["tokens"].nbytes),
-                                )
-                            handle = link.send_async(
-                                hosts[i], hosts[i + 1], payload, n_examples=1,
-                            )
-                            hop = link.hops[-1]  # metered at send time
+            run.sweep()
+        self.last_stream_stats = [dict(st.stats) for st in run.streams]
+        return run.done
 
-                            def _land(delivered, r=r, handle=handle, hop=hop):
-                                r.tokens = np.asarray(
-                                    delivered["tokens"], np.int32
-                                )
-                                if tr.enabled:
-                                    # the hop span closes at delivery (on
-                                    # the draining thread); its args carry
-                                    # the overlap split — blocked is what
-                                    # result() charged the caller, hidden
-                                    # is the link time decode covered
-                                    blocked = float(handle.wait_time)
-                                    tr.end(
-                                        r.rid, "hop",
-                                        link_s=float(hop.latency),
-                                        blocked_s=blocked,
-                                        hidden_s=max(
-                                            0.0, float(hop.latency) - blocked
-                                        ),
-                                    )
-                                return r
+    # -- open-loop load-adaptive serving ------------------------------------
+    def serve_open_loop(
+        self,
+        workload: Workload,
+        config: Optional[ServeConfig] = None,
+        *,
+        slo_s: float = 1.0,
+        controller=None,
+        step_time_s: float = 0.01,
+    ) -> OpenLoopReport:
+        """Open-loop serving (DESIGN.md §12): admission is driven by the
+        workload's ARRIVAL TIMES, not an up-front list — the system sees
+        offered load, queues build under bursts, and the report scores
+        SLO-attainment (``goodput``) rather than raw throughput.
 
-                            streams[i + 1].submit_inflight(handle, _land)
-                        else:
-                            streams[i + 1].submit([r])
-                    else:
-                        c_answered[i].add(1)
-                        c_tokens[i].add(int(gen.shape[1]))
-                        # abclint: disable=ABC202(argmax over the host digest array — pred_h fetched above)
-                        winner = int(np.argmax(digests == pred_h))
-                        r.output = gen[winner].astype(np.int32)
-                        r.tier = i
-                        h_lat.record(clk() - t_submit[r.rid])
-                        if tr.enabled:
-                            tr.instant(r.rid, "complete", tier=i)
-                        done.append(r)
-        self.last_stream_stats = [dict(st.stats) for st in streams]
-        return done
+        The run executes in VIRTUAL time: ``obs.clock`` must be an
+        advanceable clock (``repro.serve.workload.VirtualClock``; one is
+        created when no bundle is passed), and the driver advances it by
+        ``step_time_s`` per round-robin sweep (the modeled service time of
+        one decode step across the tiers) and across idle gaps to the next
+        arrival.  Identical (workload, config, controller) inputs therefore
+        replay bit-for-bit — which is what makes the controller-on vs
+        static A/B in ``bench_serving`` a like-for-like comparison.
+
+        ``controller`` (``repro.serve.controller.GreedyController``,
+        optional) is bound to the run and ticked on its own interval; it
+        may lower per-tier deferral thresholds, cap per-tier slot
+        admission, and shed arrivals under overload.  Shed requests come
+        back in ``report.shed`` with ``r.shed=True`` — never silently
+        dropped: ``offered == len(completed) + len(shed)`` is asserted.
+        ``config.seed``/geometry knobs mean the same thing as in
+        ``serve_continuous``; a trace whose arrivals are all at t=0 and a
+        no-op controller reproduce the closed-loop outputs exactly."""
+        cfg = resolve_serve_config(
+            config, "CascadeServer.serve_open_loop"
+        ).with_max_seq_default(256)
+        assert slo_s > 0 and step_time_s > 0, (slo_s, step_time_s)
+        if cfg.obs is None:
+            ob = Observability(clock=VirtualClock())
+        else:
+            ob = cfg.obs
+        assert hasattr(ob.clock, "advance"), (
+            "serve_open_loop runs in virtual time: obs.clock must be "
+            "advanceable (repro.serve.workload.VirtualClock), got "
+            f"{type(ob.clock).__name__}"
+        )
+        vt = ob.clock
+        arrivals = list(workload)  # fresh Request objects, arrival order
+        for _, r in arrivals:
+            assert len(r.tokens) + r.max_new_tokens <= cfg.max_seq, (
+                f"request {r.rid}: prompt+budget "
+                f"{len(r.tokens)}+{r.max_new_tokens} exceeds "
+                f"max_seq={cfg.max_seq}"
+            )
+        run = _CascadeRun(self, cfg, ob)
+        sc = ob.scope("serve.open_loop")
+        c_offered = sc.counter("offered")
+        c_shed = sc.counter("shed")
+        c_completed = sc.counter("completed")
+        c_in_slo = sc.counter("completed_in_slo")
+        if controller is not None:
+            controller.bind(run, slo_s=slo_s)
+        shed: List[Request] = []
+        n_in_slo = 0
+        n_seen = 0  # run.done prefix already scored against the SLO
+        idx = 0
+        next_tick = (
+            controller.config.interval_s if controller is not None
+            else float("inf")
+        )
+        while idx < len(arrivals) or run.active:
+            # admit everything that has arrived by virtual-now; overload
+            # shedding happens HERE, at the admission point, before the
+            # request ever touches a stream
+            while idx < len(arrivals) and arrivals[idx][0] <= vt.now_s + 1e-12:
+                t_arrive, r = arrivals[idx]
+                idx += 1
+                c_offered.add(1)
+                if controller is not None and controller.should_shed():
+                    r.shed = True
+                    shed.append(r)
+                    c_shed.add(1)
+                    if run.tr.enabled:
+                        run.tr.instant(r.rid, "complete", shed=True)
+                    continue
+                run.submit([r], t0=t_arrive)
+            if run.runnable:
+                run.sweep()
+                # score completions at their recorded completion time,
+                # BEFORE this sweep's time charge moves the clock
+                for r in run.done[n_seen:]:
+                    c_completed.add(1)
+                    if vt.now_s - run.t_start[r.rid] <= slo_s:
+                        c_in_slo.add(1)
+                        n_in_slo += 1
+                n_seen = len(run.done)
+                vt.advance(step_time_s)
+            elif any(st.inflight for st in run.streams):
+                run.block_on_inflight()
+            elif idx < len(arrivals):
+                # nothing runnable, nothing in flight: jump to next arrival
+                vt.advance(arrivals[idx][0] - vt.now_s)
+            else:
+                break
+            if controller is not None and vt.now_s + 1e-12 >= next_tick:
+                controller.tick(vt.now_s)
+                next_tick = vt.now_s + controller.config.interval_s
+        self.last_stream_stats = [dict(st.stats) for st in run.streams]
+        assert len(run.done) + len(shed) == len(arrivals), (
+            "open-loop invariant violated: "
+            f"{len(arrivals)} offered != {len(run.done)} completed "
+            f"+ {len(shed)} shed"
+        )
+        return OpenLoopReport(
+            offered=len(arrivals),
+            completed=run.done,
+            shed=shed,
+            completed_in_slo=n_in_slo,
+            goodput=n_in_slo / max(1, len(arrivals)),
+            p50_s=run.h_lat.percentile(0.50),
+            p99_s=run.h_lat.percentile(0.99),
+            makespan_s=vt.now_s,
+            controller_actions=(
+                list(controller.actions) if controller is not None else []
+            ),
+        )
 
     # -- accounting ---------------------------------------------------------
     def expected_cost(self, result: CascadeResult) -> float:

@@ -1,0 +1,133 @@
+"""ServeConfig: the one place serving-tuning knobs live.
+
+Before this module the three serving entrypoints
+(``ServingEngine.serve_continuous``, ``CascadeServer.serve_continuous``,
+``ServingEngine.slot_stream`` / ``SlotStream`` construction) each
+re-declared the same eight tuning kwargs (``n_slots``, ``max_seq``,
+``seed``, ``chunked_prefill``, ``paged``, ``page_size``, ``n_pages``,
+``obs`` — plus ``max_chunk``), so adding a knob meant editing every
+signature and drift between them was invisible.  ``ServeConfig`` is the
+consolidated value object all of them (and the open-loop
+``CascadeServer.serve_open_loop``) accept as ``config=``.
+
+Legacy kwargs keep working through ONE deprecation pathway:
+``resolve_serve_config`` is the single function that maps old-style
+keyword arguments onto a ``ServeConfig`` (warning once per process), and
+every entrypoint routes through it — there is no second place where the
+legacy names are interpreted, so the mapping cannot fork.  Passing BOTH a
+``config`` and explicit legacy kwargs is a ``TypeError``: a call site is
+either migrated or it is not.
+
+No behavior change: an old-style call and its ``ServeConfig`` spelling
+resolve to identical field values, drive identical code, and produce
+bitwise-identical generations (regression-tested old-vs-new in
+``tests/test_serve_config.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from repro.obs import Observability
+
+
+class _Unset:
+    """Sentinel distinguishing 'kwarg not passed' from any real value
+    (``None`` is meaningful for ``max_seq``/``paged``/``n_pages``/``obs``)."""
+
+    __slots__ = ()
+
+    def __repr__(self):
+        return "<unset>"
+
+
+UNSET = _Unset()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Tuning knobs shared by every serving entrypoint.
+
+    ``max_seq=None`` keeps each entrypoint's historical default (the
+    engine's own ``max_seq``; 256 for the cascade drivers).  ``paged=None``
+    auto-selects block-paged KV pools wherever the family supports them
+    (``paged=False`` keeps the dense slot cache as the parity oracle);
+    ``n_pages=None`` sizes pools at dense-equivalent capacity plus the
+    overflow sink.  ``seed`` feeds the per-tier sampling keys (cascade
+    tiers only — the single engine holds its own rng).  ``obs=None`` gives
+    each component the private-bundle legacy behavior; pass one
+    ``Observability`` to unify the registry/trace across the run."""
+
+    n_slots: int = 8
+    max_seq: Optional[int] = None
+    seed: int = 0
+    chunked_prefill: bool = True
+    max_chunk: int = 256
+    paged: Optional[bool] = None
+    page_size: int = 16
+    n_pages: Optional[int] = None
+    obs: Optional[Observability] = None
+
+    def with_max_seq_default(self, default: int) -> "ServeConfig":
+        """This config with ``max_seq=None`` resolved to the caller's
+        historical default (the engine's ``self.max_seq``, the cascade's
+        256) — the one per-entrypoint difference the consolidation keeps."""
+        if self.max_seq is not None:
+            return self
+        return dataclasses.replace(self, max_seq=int(default))
+
+    def resolved_obs(self) -> Observability:
+        """The run's telemetry bundle: the configured one, or a fresh
+        private bundle (the legacy fresh-per-run default)."""
+        return self.obs if self.obs is not None else Observability.private()
+
+
+_FIELD_NAMES = tuple(f.name for f in dataclasses.fields(ServeConfig))
+
+# one warning per process: the single deprecation pathway stays quiet after
+# its first firing so legacy-heavy suites are not drowned in repeats
+_warned_legacy = False
+
+
+def _reset_legacy_warning() -> None:
+    """Test hook: re-arm the once-per-process deprecation warning."""
+    global _warned_legacy
+    _warned_legacy = False
+
+
+def resolve_serve_config(
+    config: Optional[ServeConfig], caller: str, **legacy
+) -> ServeConfig:
+    """THE deprecation pathway: fold legacy serving kwargs into a
+    ``ServeConfig``.
+
+    ``legacy`` values are either ``UNSET`` (kwarg not passed — the
+    ``ServeConfig`` field default applies) or the caller-supplied value.
+    With ``config`` given, any explicitly-passed legacy kwarg is a
+    ``TypeError`` — mixing the two styles would make precedence ambiguous.
+    With only legacy kwargs, a ``DeprecationWarning`` fires once per
+    process pointing at the ``config=ServeConfig(...)`` spelling."""
+    explicit = {k: v for k, v in legacy.items() if v is not UNSET}
+    unknown = set(explicit) - set(_FIELD_NAMES)
+    assert not unknown, f"{caller}: unknown serving kwargs {sorted(unknown)}"
+    if config is not None:
+        if explicit:
+            raise TypeError(
+                f"{caller}: pass config=ServeConfig(...) OR legacy kwargs, "
+                f"not both (got legacy {sorted(explicit)})"
+            )
+        return config
+    if explicit:
+        global _warned_legacy
+        if not _warned_legacy:
+            _warned_legacy = True
+            warnings.warn(
+                f"{caller}: individual serving kwargs "
+                f"({', '.join(sorted(explicit))}) are deprecated — pass "
+                "config=repro.serve.ServeConfig(...) instead (the legacy "
+                "names map onto the same fields, behavior unchanged)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+    return ServeConfig(**explicit)

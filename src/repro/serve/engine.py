@@ -25,6 +25,7 @@ with chunked-prefill admission on by default.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 from types import SimpleNamespace
 from typing import List, Optional
@@ -38,6 +39,7 @@ from repro.core.cascade import host_fetch
 from repro.models import api
 from repro.obs import Observability, StatsView
 from repro.serve.batching import Request, RequestQueue
+from repro.serve.config import UNSET, ServeConfig, resolve_serve_config
 
 # ---------------------------------------------------------------------------
 # compile-once program cache + trace accounting
@@ -269,51 +271,57 @@ class ServingEngine:
     # -- continuous batching ----------------------------------------------
     def slot_stream(
         self,
+        config: Optional[ServeConfig] = None,
         *,
-        n_slots: int = 8,
-        max_seq: Optional[int] = None,
-        chunked_prefill: bool = True,
-        max_chunk: int = 256,
-        paged: Optional[bool] = None,
-        page_size: int = 16,
-        n_pages: Optional[int] = None,
-        obs: Optional[Observability] = None,
+        n_slots=UNSET,
+        max_seq=UNSET,
+        chunked_prefill=UNSET,
+        max_chunk=UNSET,
+        paged=UNSET,
+        page_size=UNSET,
+        n_pages=UNSET,
+        obs=UNSET,
     ):
         """A fresh ``SlotStream`` (serve/slot_stream.py) over this engine's
         compile-once programs — the E=1 instantiation of the shared slot
-        state machine.  ``paged`` selects block-paged KV pools (default:
-        wherever the family supports them; ``paged=False`` keeps the dense
-        slot cache as the parity oracle); ``n_pages`` bounds pool HBM
-        (default: dense-equivalent capacity plus the overflow sink).
-        ``obs`` shares a telemetry bundle with the stream and its pool
-        (default: the stream keeps a private registry, preserving the
-        fresh-per-stream legacy stats contract)."""
+        state machine.  Takes a ``ServeConfig`` (``config=``) or the legacy
+        kwargs (one deprecation pathway — serve/config.py).  ``paged``
+        selects block-paged KV pools (default: wherever the family supports
+        them; ``paged=False`` keeps the dense slot cache as the parity
+        oracle); ``n_pages`` bounds pool HBM (default: dense-equivalent
+        capacity plus the overflow sink).  ``obs`` shares a telemetry
+        bundle with the stream and its pool (default: the stream keeps a
+        private registry, preserving the fresh-per-stream legacy stats
+        contract)."""
         from repro.serve.slot_stream import EngineBackend, SlotStream
 
-        if max_seq is None:
-            max_seq = self.max_seq
+        cfg = resolve_serve_config(
+            config, "ServingEngine.slot_stream", n_slots=n_slots,
+            max_seq=max_seq, chunked_prefill=chunked_prefill,
+            max_chunk=max_chunk, paged=paged, page_size=page_size,
+            n_pages=n_pages, obs=obs,
+        ).with_max_seq_default(self.max_seq)
         backend = EngineBackend(
             self.cfg, self.params, model_programs(self.cfg), self._sample,
-            n_slots=n_slots, max_seq=max_seq,
+            n_slots=cfg.n_slots, max_seq=cfg.max_seq,
             prefill_counter=self._c_prefill,
-            paged=paged, page_size=page_size, n_pages=n_pages, obs=obs,
+            paged=cfg.paged, page_size=cfg.page_size, n_pages=cfg.n_pages,
+            obs=cfg.obs,
         )
-        return SlotStream(
-            backend, n_slots=n_slots, max_seq=max_seq,
-            chunked_prefill=chunked_prefill, max_chunk=max_chunk, obs=obs,
-        )
+        return SlotStream(backend, cfg)
 
     def serve_continuous(
         self,
         requests: List[Request],
+        config: Optional[ServeConfig] = None,
         *,
-        n_slots: int = 8,
-        max_seq: Optional[int] = None,
-        chunked_prefill: bool = True,
-        paged: Optional[bool] = None,
-        page_size: int = 16,
-        n_pages: Optional[int] = None,
-        obs: Optional[Observability] = None,
+        n_slots=UNSET,
+        max_seq=UNSET,
+        chunked_prefill=UNSET,
+        paged=UNSET,
+        page_size=UNSET,
+        n_pages=UNSET,
+        obs=UNSET,
     ) -> List[Request]:
         """Slot-based continuous batching: a thin driver over ``SlotStream``
         (the E=1 case of the shared slot state machine).  One decode step
@@ -322,20 +330,34 @@ class ServingEngine:
         lengths); freed slots admit new requests mid-stream, consuming
         ``prompt[:-1]`` through bucketed chunked prefill (or token-by-token
         through the decode program with ``chunked_prefill=False``).
-        Repeated invocations reuse the module-level jitted programs —
-        nothing is re-jitted per call.  Requests cut short by the cache
-        wall (``pos >= max_seq - 1``) come back with ``truncated=True``.
-        With ``obs``, the stream/pool record into the shared registry, each
-        completion lands in the ``serve.request_latency_s`` histogram, and
-        an enabled tracer gets the full per-request lifecycle plus the
-        terminal ``complete`` instant.  Returns the completed requests."""
-        ob = obs if obs is not None else self.obs
-        stream = self.slot_stream(
-            n_slots=n_slots, max_seq=max_seq, chunked_prefill=chunked_prefill,
-            paged=paged, page_size=page_size, n_pages=n_pages, obs=obs,
-        )
+        Takes a ``ServeConfig`` (``config=``) or the legacy kwargs (one
+        deprecation pathway — serve/config.py; the two spellings are
+        bitwise-equivalent).  Repeated invocations reuse the module-level
+        jitted programs — nothing is re-jitted per call.  Requests cut
+        short by the cache wall (``pos >= max_seq - 1``) come back with
+        ``truncated=True``.  With ``obs``, the stream/pool record into the
+        shared registry, each completion lands in the
+        ``serve.request_latency_s`` histogram, and an enabled tracer gets
+        the full per-request lifecycle plus the terminal ``complete``
+        instant; without one, the stream records into the ENGINE's own
+        registry (``self.obs``), so stream counters are never lost to an
+        unreachable private bundle.  Returns the completed requests."""
+        cfg = resolve_serve_config(
+            config, "ServingEngine.serve_continuous", n_slots=n_slots,
+            max_seq=max_seq, chunked_prefill=chunked_prefill, paged=paged,
+            page_size=page_size, n_pages=n_pages, obs=obs,
+        ).with_max_seq_default(self.max_seq)
+        ob = cfg.obs if cfg.obs is not None else self.obs
+        # the stream must record into the RESOLVED bundle: with obs=None the
+        # engine's registry is the destination, not a private stream bundle
+        # (regression: tests/test_serve_config.py::test_engine_stream_obs)
+        stream = self.slot_stream(dataclasses.replace(cfg, obs=ob))
         clk = ob.clock
         h_lat = ob.registry.histogram("serve.request_latency_s")
+        # counters in a shared registry are cumulative across serves — the
+        # engine's decode credit and the legacy per-run ``last_stream_stats``
+        # are this run's DELTA, not the running total
+        st0 = dict(stream.stats)
         t_submit = {r.rid: clk() for r in requests}
         stream.submit(requests)
         done: List[Request] = []
@@ -345,8 +367,9 @@ class ServingEngine:
             if ob.tracer.enabled:
                 ob.tracer.instant(r.rid, "complete", truncated=r.truncated)
             done.append(r)
-        self._c_decode.add(stream.stats["decode_tokens"])
-        self.last_stream_stats = dict(stream.stats)
+        st1 = dict(stream.stats)
+        self._c_decode.add(st1["decode_tokens"] - st0["decode_tokens"])
+        self.last_stream_stats = {k: v - st0[k] for k, v in st1.items()}
         return done
 
     # -- queue-driven serving --------------------------------------------

@@ -88,27 +88,49 @@ from repro.models import api
 from repro.models.params import unbox
 from repro.obs import Observability, StatsView
 from repro.serve.batching import Request
+from repro.serve.config import UNSET, ServeConfig, resolve_serve_config
 
 
 class SlotStream:
-    """Slot-based continuous batching over a device backend."""
+    """Slot-based continuous batching over a device backend.
+
+    Construction takes a ``ServeConfig`` (``config=``) or the legacy
+    kwargs (one deprecation pathway — ``serve/config.py``).  The stream
+    reads the scheduling fields (``n_slots``/``max_seq``/
+    ``chunked_prefill``/``max_chunk``/``obs``); the memory/sampling fields
+    (``paged``/``page_size``/``n_pages``/``seed``) belong to the backend
+    its caller already built."""
 
     def __init__(
         self,
         backend,
+        config: Optional[ServeConfig] = None,
         *,
-        n_slots: int = 8,
-        max_seq: int = 256,
-        chunked_prefill: bool = True,
-        max_chunk: int = 256,
-        obs: Optional[Observability] = None,
+        n_slots=UNSET,
+        max_seq=UNSET,
+        chunked_prefill=UNSET,
+        max_chunk=UNSET,
+        obs=UNSET,
         name: str = "slot_stream",
     ):
+        cfg = resolve_serve_config(
+            config, "SlotStream", n_slots=n_slots, max_seq=max_seq,
+            chunked_prefill=chunked_prefill, max_chunk=max_chunk, obs=obs,
+        ).with_max_seq_default(256)
+        n_slots, max_seq = cfg.n_slots, cfg.max_seq
+        chunked_prefill, max_chunk, obs = (
+            cfg.chunked_prefill, cfg.max_chunk, cfg.obs,
+        )
         self.backend = backend
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.max_chunk = max_chunk
         self.chunked = bool(chunked_prefill) and backend.supports_chunked_prefill
+        # admission-side slot cap (<= n_slots): the online controller's
+        # slot-count actuation point.  Slots at index >= slot_limit stop
+        # ADMITTING; occupants above a lowered limit drain naturally, so
+        # actuation never aborts in-flight work.
+        self.slot_limit = n_slots
         E = backend.E
         self.queue: deque = deque()
         # (SendHandle, finalize) pairs whose payload is still in flight on a
@@ -139,6 +161,9 @@ class SlotStream:
         self._c_shared_tokens = sc.counter("shared_tokens")
         self._c_decode_tokens = sc.counter("decode_tokens")
         self._c_inflight_admitted = sc.counter("inflight_admitted")
+        # ready-queue depth after every enqueue/admit — the streaming
+        # backlog signal the online controller reads from the registry
+        self._g_queue = sc.gauge("queue_depth")
         # host wall time histograms.  jax dispatch is async, so the admit/
         # decode dispatch times measure enqueue overhead, not device
         # compute — block_until_ready on the backend's cache around
@@ -192,6 +217,7 @@ class SlotStream:
             self.queue.append(self._check_request(r))
             if self._tr.enabled:
                 self._tr.begin(r.rid, "queue_wait", stream=self.name)
+        self._g_queue.set(len(self.queue))
 
     def submit_inflight(self, handle, finalize):
         """Enqueue work whose payload is still crossing a transport link.
@@ -225,7 +251,16 @@ class SlotStream:
             if self._tr.enabled:
                 self._tr.begin(r.rid, "queue_wait", stream=self.name)
             landed += 1
+        if landed:
+            self._g_queue.set(len(self.queue))
         return landed
+
+    def set_slot_limit(self, k: int) -> None:
+        """Cap how many slots may hold occupants (clamped to
+        ``[1, n_slots]``) — the controller's slot-count actuation.  A
+        lowered limit takes effect as occupied slots free up; raising it
+        re-opens admission immediately on the next ``refill``."""
+        self.slot_limit = max(1, min(int(k), self.n_slots))
 
     def _release(self, s: int):
         """Hand the slot's memory back to the backend (paged pools decref
@@ -237,7 +272,7 @@ class SlotStream:
         self.slot_emitted[s] = []
 
     def _admit(self, s: int):
-        if not self.queue:
+        if not self.queue or s >= self.slot_limit:
             self.slot_req[s] = None
             return
         r = self.queue[0]  # peek: admission may be refused by the pool
@@ -265,6 +300,7 @@ class SlotStream:
         t1 = self._clock()
         self._h_begin_slot.record(t1 - t0)
         self.queue.popleft()
+        self._g_queue.set(len(self.queue))
         tr = self._tr
         if tr.enabled:
             tr.end(r.rid, "queue_wait")
