@@ -275,6 +275,58 @@ def run(verbose=True):
     assert ol_adaptive.goodput > ol_static.goodput, (ol_adaptive, ol_static)
     assert ol_ctl.actions, "controller never actuated on a bursty trace"
 
+    # --- cascade-as-drafter speculative decoding (DESIGN.md §13) -----------
+    # A/B on identical requests: tier0 = [m0, m0, m2] (the m0 pair agrees,
+    # so theta=0.8 defers with m0's generation as the plurality draft),
+    # tier1 = [m0] — at T=0 the draft is exactly what tier 1 would decode,
+    # so acceptance is deterministic and the gate can be strict: outputs
+    # BITWISE identical to plain serving, accept rate > 0, and the big
+    # tier spends strictly fewer decode steps per deferral.
+    from repro.serve import ServeConfig as _SC
+
+    spec_m0 = ens.take_member(v1, 0)
+    spec_m2 = ens.take_member(v1, 2)
+    spec_t0 = jax.tree.map(
+        lambda a, b: jnp.stack([a, a, b]), spec_m0, spec_m2
+    )
+
+    def _spec_server():
+        return CascadeServer([
+            CascadeTier(SMALL, spec_t0,
+                        TierSpec("t1", "vote_preds", 0.8, k=3, cost=1.0)),
+            CascadeTier(SMALL, jax.tree.map(lambda v: v[0:1], v1),
+                        TierSpec("t2", "vote_preds", 0.0, k=1, cost=30.0)),
+        ])
+
+    def _spec_requests():
+        r = np.random.default_rng(11)
+        return [Request(tokens=r.integers(1, 256, int(L)).astype(np.int32),
+                        max_new_tokens=6)
+                for L in r.integers(8, 25, 8 if smoke_mode() else 16)]
+
+    spec_out, spec_stats, spec_wall = {}, {}, {}
+    for on in (False, True):
+        srv = _spec_server()
+        scfg = _SC(n_slots=4, max_seq=64, speculative=on)
+        srv.serve_continuous(_spec_requests(), scfg)  # warmup (verify traces)
+        t0 = time.perf_counter()
+        done = srv.serve_continuous(_spec_requests(), scfg)
+        spec_wall[on] = time.perf_counter() - t0
+        spec_out[on] = {tuple(r.tokens.tolist()): (r.tier, tuple(r.output.tolist()))
+                        for r in done}
+        spec_stats[on] = [dict(s) for s in srv.last_stream_stats]
+    assert spec_out[True] == spec_out[False], (
+        "speculative serving must emit bitwise what plain serving emits"
+    )
+    sp1, pl1 = spec_stats[True][1], spec_stats[False][1]
+    n_deferrals = sp1["admitted"]
+    spec_accepted = sp1["spec_accepted_tokens"]
+    spec_offered = sp1["spec_draft_tokens"]
+    assert n_deferrals > 0 and spec_accepted > 0, (sp1, pl1)
+    assert sp1["decode_tokens"] < pl1["decode_tokens"], (sp1, pl1)
+    acc_per_deferral = spec_accepted / n_deferrals
+    accept_rate = spec_accepted / max(1, spec_offered)
+
     # --- overlapped cross-host continuous serving (DESIGN.md §8) -----------
     # the shared harness (benchmarks/common.py measure_overlap) asserts the
     # equivalence contract; this bench only reports the ratio — the hard
@@ -358,6 +410,12 @@ def run(verbose=True):
               f"({len(ol_ctl.actions)} actions, {len(ol_adaptive.shed)} shed "
               f"marked); p50 {ol_adaptive.p50_s*1e3:.0f}ms, "
               f"p99 {ol_adaptive.p99_s*1e3:.0f}ms")
+        print(f"# speculative (cascade-as-drafter): {n_deferrals} deferrals, "
+              f"{acc_per_deferral:.1f} accepted tokens/deferral "
+              f"(accept rate {accept_rate:.2f}); big-tier decode steps "
+              f"{pl1['decode_tokens']} plain -> {sp1['decode_tokens']} "
+              f"speculative; generations bitwise == plain; wall "
+              f"{spec_wall[False]:.2f}s -> {spec_wall[True]:.2f}s")
     assert retraced == 0, "steady-state classify must not retrace"
     # derived keys that read a stats surface carry the surface's
     # fully-qualified registry name (DESIGN.md §11) — tools/perf_compare.py
@@ -405,4 +463,17 @@ def run(verbose=True):
         f"shed={len(ol_adaptive.shed)};offered={ol_adaptive.offered};"
         f"gate=off",
     )
-    return row + "\n" + row_obs + "\n" + row_ol
+    # speculative A/B row (DESIGN.md §13): the us column is the speculative
+    # serve wall (hardware-relative) — gate=off; the hard gates are the
+    # asserted bitwise parity, accept rate > 0, and the strict big-tier
+    # decode-step drop above.
+    row_spec = csv_row(
+        "serving_speculative", spec_wall[True] * 1e6,
+        f"accepted_per_deferral={acc_per_deferral:.1f};"
+        f"accept_rate={accept_rate:.2f};"
+        f"deferred={n_deferrals};"
+        f"tier1_decode_plain={pl1['decode_tokens']};"
+        f"tier1_decode_spec={sp1['decode_tokens']};"
+        f"bitwise_vs_plain=True;gate=off",
+    )
+    return row + "\n" + row_obs + "\n" + row_ol + "\n" + row_spec

@@ -769,6 +769,15 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
     )
 
 
+def supports_draft_verify(cfg: ModelConfig) -> bool:
+    """Speculative draft verification needs (a) chunked prefill to score
+    all draft positions in one pass and (b) a pos-masked attention cache so
+    rejected draft rows can be rolled back by position alone.  Constant-state
+    families fail (b): their recurrent state has absorbed the rejected
+    tokens and there is no mask to hide them behind."""
+    return supports_chunked_prefill(cfg) and not has_slot_state(cfg)
+
+
 def prefill_into_slot(
     params,
     tokens,
@@ -778,6 +787,7 @@ def prefill_into_slot(
     cfg: ModelConfig,
     *,
     window_override=None,
+    return_hidden: bool = False,
 ):
     """Consume a C-token chunk of one slot's prompt into the slot cache.
 
@@ -802,7 +812,10 @@ def prefill_into_slot(
     pins this); serve capacity-tight MoE with ``chunked_prefill=False`` if
     bitwise admission parity matters more than admission latency.
 
-    Returns the updated cache."""
+    Returns the updated cache; with ``return_hidden=True`` (attention
+    families only — the speculative verify pass, see
+    ``supports_draft_verify``) returns ``(hidden (1, C, D), cache)`` so the
+    caller can project per-position logits over the chunk."""
     window = window_override if window_override is not None else cfg.sliding_window
     fam = cfg.family
     slot = jnp.asarray(slot)
@@ -825,10 +838,11 @@ def prefill_into_slot(
             )
             return h, (kc, vc)
 
-        _, (k_new, v_new) = jax.lax.scan(
+        h, (k_new, v_new) = jax.lax.scan(
             body, x, (params["layers"], take(cache["k"]), take(cache["v"]))
         )
-        return {"k": put(cache["k"], k_new), "v": put(cache["v"], v_new)}
+        new_cache = {"k": put(cache["k"], k_new), "v": put(cache["v"], v_new)}
+        return (h, new_cache) if return_hidden else new_cache
 
     if _interleaved_moe(cfg):
         me = cfg.moe_every
@@ -862,13 +876,17 @@ def prefill_into_slot(
             v_new = jnp.concatenate([vd, vm[None]], axis=0)
             return h, (k_new, v_new)
 
-        _, (k_new, v_new) = jax.lax.scan(
+        h, (k_new, v_new) = jax.lax.scan(
             body, x, (grp_dense, params["layers"]["moe"], grp_cache)
         )
-        return {
+        new_cache = {
             "k": put(cache["k"], k_new.reshape((cfg.n_layers,) + k_new.shape[2:])),
             "v": put(cache["v"], v_new.reshape((cfg.n_layers,) + v_new.shape[2:])),
         }
+        return (h, new_cache) if return_hidden else new_cache
+
+    if return_hidden:  # constant-state families cannot roll a verify back
+        raise ValueError(f"return_hidden unsupported for family {fam}")
 
     if fam == "ssm_mamba2":
 
@@ -1109,6 +1127,7 @@ def prefill_into_slot_paged(
     cfg: ModelConfig,
     *,
     window_override=None,
+    return_hidden: bool = False,
 ):
     """Paged counterpart of ``prefill_into_slot``: consume a C-token chunk
     of one slot's prompt into the pool pages its table row maps.
@@ -1116,7 +1135,9 @@ def prefill_into_slot_paged(
     tokens: (C,) int32 for positions [start, start+C); pages_row: (n_pg,)
     the slot's page-table row; start is a traced scalar.  Shared-prefix
     admission skips chunks for the shared span, so ``start`` begins at the
-    first unshared position.  Returns the updated pool."""
+    first unshared position.  Returns the updated pool; with
+    ``return_hidden=True`` returns ``(hidden (1, C, D), pool)`` for the
+    speculative verify pass."""
     window = window_override if window_override is not None else cfg.sliding_window
     assert supports_paging(cfg), cfg.family
     start = jnp.asarray(start)
@@ -1132,10 +1153,11 @@ def prefill_into_slot_paged(
             )
             return h, (kp, vp)
 
-        _, (k_new, v_new) = jax.lax.scan(
+        h, (k_new, v_new) = jax.lax.scan(
             body, x, (params["layers"], pool["k"], pool["v"])
         )
-        return {"k": k_new, "v": v_new}
+        new_pool = {"k": k_new, "v": v_new}
+        return (h, new_pool) if return_hidden else new_pool
 
     me = cfg.moe_every
     n_groups = cfg.n_layers // me
@@ -1168,13 +1190,46 @@ def prefill_into_slot_paged(
         v_new = jnp.concatenate([vd, vm[None]], axis=0)
         return h, (k_new, v_new)
 
-    _, (k_new, v_new) = jax.lax.scan(
+    h, (k_new, v_new) = jax.lax.scan(
         body, x, (grp_dense, params["layers"]["moe"], grp_pool)
     )
-    return {
+    new_pool = {
         "k": k_new.reshape((cfg.n_layers,) + k_new.shape[2:]),
         "v": v_new.reshape((cfg.n_layers,) + v_new.shape[2:]),
     }
+    return (h, new_pool) if return_hidden else new_pool
+
+
+def prefill_into_slot_logits(
+    params, tokens, cache, slot, start, cfg: ModelConfig, *, window_override=None
+):
+    """Chunked prefill that ALSO scores every chunk position: returns
+    ``(logits (C, V) f32, cache)`` where ``logits[j]`` is the next-token
+    distribution after prompt position ``start + j``.  This is the
+    speculative verify pass (serve/speculative.py): feeding the token
+    before each draft position yields, in one chunk, the model's own
+    choice at every draft position — numerically the decode head, since
+    chunked prefill and decode share the attention math
+    (``layers._chunk_attend``) and the head projection
+    (``layers.project_logits``)."""
+    assert supports_draft_verify(cfg), cfg.family
+    h, cache = prefill_into_slot(
+        params, tokens, cache, slot, start, cfg,
+        window_override=window_override, return_hidden=True,
+    )
+    return L.project_logits(params, h, cfg)[0], cache
+
+
+def prefill_into_slot_paged_logits(
+    params, tokens, pool, pages_row, start, cfg: ModelConfig, *, window_override=None
+):
+    """Paged twin of ``prefill_into_slot_logits``: ``(logits (C, V), pool)``."""
+    assert supports_draft_verify(cfg), cfg.family
+    h, pool = prefill_into_slot_paged(
+        params, tokens, pool, pages_row, start, cfg,
+        window_override=window_override, return_hidden=True,
+    )
+    return L.project_logits(params, h, cfg)[0], pool
 
 
 # ---------------------------------------------------------------------------

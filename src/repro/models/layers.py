@@ -327,6 +327,17 @@ def _chunk_attend(q, k_view, v_view, positions, cfg: ModelConfig, sliding_window
     return ctx.reshape(B, C, H, hd).astype(q.dtype)
 
 
+def project_logits(params, x, cfg: ModelConfig):
+    """Final-norm + LM-head projection of hidden states ``x`` (..., S, D)
+    to f32 logits (..., S, V) — the one head implementation shared by batch
+    prefill/decode and the chunked verify pass (``api.prefill_into_slot_
+    logits``), so a draft token scored by either path sees the same
+    numerics."""
+    x = apply_norm(params["final_norm"], x, cfg)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    return (x @ head).astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # block-paged attention (serve/paging.py owns the table; see DESIGN.md §10)
 # ---------------------------------------------------------------------------

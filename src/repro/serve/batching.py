@@ -36,6 +36,12 @@ class Request:
     # overload: it still comes back to the caller (never silently dropped),
     # with ``output=None`` and this flag set.
     shed: bool = False
+    # speculative deferral (serve/speculative.py): the previous tier's
+    # agreeing generation, set by the cascade when ``ServeConfig.
+    # speculative`` is on.  Consumed (and cleared) at admission by the
+    # receiving SlotStream's verify pass; rides the deferral hop as part
+    # of the metered payload.
+    draft: Optional[np.ndarray] = None
 
 
 _pow2_at_least = bucket_size  # canonical bucket helper lives in core.cascade

@@ -58,6 +58,7 @@ from repro.serve.batching import Request
 from repro.serve.config import UNSET, ServeConfig, resolve_serve_config
 from repro.serve.engine import _counted, grow_cache
 from repro.serve.slot_stream import SlotStream, TierBackend
+from repro.serve.speculative import verify_sampler
 from repro.serve.workload import VirtualClock, Workload
 
 
@@ -174,6 +175,19 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
             lambda p, c: api.prefill_into_slot(p, tokens, c, slot, start, cfg)
         )(values, caches)
 
+    sample_verify = verify_sampler(temperature)
+
+    def verify_chunk(values, caches, tokens, slot, start, slot_key):
+        # speculative verify (serve/speculative.py): chunked prefill that
+        # also scores every position, then the decode-equivalent sampler
+        logits, caches = jax.vmap(
+            lambda p, c: api.prefill_into_slot_logits(
+                p, tokens, c, slot, start, cfg
+            )
+        )(values, caches)
+        pos = start + jnp.arange(tokens.shape[0])
+        return sample_verify(logits, slot_key, pos), caches
+
     def reset_slot(caches, slot):
         return jax.vmap(lambda c: api.reset_slot(c, slot, cfg))(caches)
 
@@ -191,6 +205,11 @@ def tier_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace:
         prefill_chunk=(
             jax.jit(_counted(f"{key}/ens_prefill_chunk", prefill_chunk))
             if api.supports_chunked_prefill(cfg)
+            else None
+        ),
+        verify_chunk=(
+            jax.jit(_counted(f"{key}/ens_verify_chunk", verify_chunk))
+            if api.supports_draft_verify(cfg)
             else None
         ),
         reset_slot=(
@@ -225,6 +244,17 @@ def tier_paged_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace
             )
         )(values, pools)
 
+    sample_verify = verify_sampler(temperature)
+
+    def verify_chunk(values, pools, tokens, pages_row, start, slot_key):
+        logits, pools = jax.vmap(
+            lambda v, pl: api.prefill_into_slot_paged_logits(
+                v, tokens, pl, pages_row, start, cfg
+            )
+        )(values, pools)
+        pos = start + jnp.arange(tokens.shape[0])
+        return sample_verify(logits, slot_key, pos), pools
+
     key = f"{cfg.name}@T{temperature:g}"
     return SimpleNamespace(
         decode_slots=jax.jit(
@@ -232,6 +262,9 @@ def tier_paged_programs(cfg: ModelConfig, temperature: float) -> SimpleNamespace
         ),
         prefill_chunk=jax.jit(
             _counted(f"{key}/ens_prefill_chunk_paged", prefill_chunk)
+        ),
+        verify_chunk=jax.jit(
+            _counted(f"{key}/ens_verify_chunk_paged", verify_chunk)
         ),
         copy_page=jax.jit(
             _counted(f"{key}/ens_copy_pool_page", api.copy_pool_page)
@@ -260,6 +293,7 @@ class CascadeTier:
         self._decode = programs.decode
         self._decode_slots = programs.decode_slots
         self._prefill_chunk = programs.prefill_chunk
+        self._verify_chunk = programs.verify_chunk
         self._reset_slot = programs.reset_slot
 
     def generate(
@@ -353,6 +387,11 @@ class _CascadeRun:
             sc.histogram("agreement_margin", buckets=UNIT_BUCKETS)
             for sc in tier_sc
         ]
+        self.h_accept = [
+            sc.histogram("draft_accept_rate", buckets=UNIT_BUCKETS)
+            for sc in tier_sc
+        ]
+        self.speculative = bool(cfg.speculative)
         self.theta_offset: List[float] = [0.0] * n
         self.streams = [
             SlotStream(
@@ -367,8 +406,17 @@ class _CascadeRun:
             )
             for i, t in enumerate(self.tiers)
         ]
+        for i, st in enumerate(self.streams):
+            if i > 0:
+                st.on_draft_verified = self._accept_recorder(i)
         self.t_start: dict = {}
         self.done: List[Request] = []
+
+    def _accept_recorder(self, i: int):
+        def record(r, n_acc, n_draft):
+            self.h_accept[i].record(n_acc / max(1, n_draft))
+
+        return record
 
     # -- driver surface -----------------------------------------------------
     def submit(self, requests: Sequence[Request], *, t0=None) -> None:
@@ -438,6 +486,15 @@ class _CascadeRun:
             )
         if defer:
             self.c_deferred[i].add(1)
+            # cascade-as-drafter (serve/speculative.py): the plurality
+            # generation this tier voted on becomes the next tier's draft
+            # — the agreeing work travels with the deferral instead of
+            # being thrown away
+            draft = None
+            if self.speculative and gen.shape[1]:
+                # abclint: disable=ABC202(argmax over the host digest array — pred_h fetched above)
+                w = int(np.argmax(digests == pred_h))
+                draft = gen[w].astype(np.int32)
             placement = self.server.placement
             link = placement.link(i) if placement is not None else None
             if link is not None:
@@ -448,12 +505,17 @@ class _CascadeRun:
                 # remaining slots keep decoding over the hop
                 # abclint: disable=ABC203(r.tokens is the host prompt array — the payload is built host-side before the metered send)
                 payload = {"tokens": np.asarray(r.tokens, np.int32)}
+                n_bytes = int(payload["tokens"].nbytes)
+                if draft is not None:
+                    # draft tokens ride the same metered hop
+                    payload["draft"] = draft
+                    n_bytes += int(draft.nbytes)
                 hosts = self.hosts
                 if tr.enabled:
                     tr.begin(
                         r.rid, "hop",
                         src=hosts[i], dst=hosts[i + 1],
-                        n_bytes=int(payload["tokens"].nbytes),
+                        n_bytes=n_bytes,
                     )
                 handle = link.send_async(
                     hosts[i], hosts[i + 1], payload, n_examples=1,
@@ -464,6 +526,11 @@ class _CascadeRun:
                     r.tokens = np.asarray(
                         delivered["tokens"], np.int32
                     )
+                    if "draft" in delivered:
+                        # abclint: disable=ABC203(delivered payload is host-side — the transport already moved it)
+                        r.draft = np.asarray(
+                            delivered["draft"], np.int32
+                        )
                     if tr.enabled:
                         # the hop span closes at delivery (on
                         # the draining thread); its args carry
@@ -483,6 +550,7 @@ class _CascadeRun:
 
                 self.streams[i + 1].submit_inflight(handle, _land)
             else:
+                r.draft = draft
                 self.streams[i + 1].submit([r])
         else:
             self.c_answered[i].add(1)

@@ -68,6 +68,13 @@ class ServeConfig:
     page_size: int = 16
     n_pages: Optional[int] = None
     obs: Optional[Observability] = None
+    # cascade-as-drafter speculative decoding (serve/speculative.py,
+    # DESIGN.md §13): deferrals carry the fast tier's agreeing generation
+    # as a draft, verified by the next tier in one chunked pass.  Output
+    # tokens are bitwise-identical either way (at any temperature); the
+    # knob only trades a verify pass for per-token decode steps.  New-style
+    # only — there is no legacy kwarg for it.
+    speculative: bool = False
 
     def with_max_seq_default(self, default: int) -> "ServeConfig":
         """This config with ``max_seq=None`` resolved to the caller's

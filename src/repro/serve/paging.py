@@ -229,6 +229,51 @@ class PagePool:
                     self._page_key[mapped[i]] = keys[i]
         return shared * ps
 
+    def extend(self, slot: int, n_rows: int) -> bool:
+        """Map PRIVATE pages so rows ``[0, n_rows)`` of ``slot`` are all
+        covered — the speculative verify pass writes draft KV rows past the
+        admission span (serve/speculative.py).  Extension pages are never
+        looked up in, or registered with, the prefix index: their contents
+        are provisional until the acceptance decision, so they must not be
+        visible to sharers (COW-safety is structural — registration only
+        ever covers the admission prefix, which verify never writes).
+
+        Returns False (rolling back its OWN allocations only) when the pool
+        cannot cover the span; the caller falls back to plain admission."""
+        row = self.table[slot]
+        mapped = row.tolist()
+        n_need = (n_rows - 1) // self.page_size + 1
+        assert n_need <= self.pages_per_slot, (n_rows, self.max_seq)
+        added: List[Tuple[int, int]] = []  # (table index, page) this call mapped
+        for i in range(n_need):
+            if mapped[i] >= 0:
+                continue
+            pg = self._alloc()
+            if pg is None:
+                for j, old in added:
+                    self._decref(old)
+                    row[j] = -1
+                self._c_admit_failures.add(1)
+                return False
+            row[i] = pg
+            added.append((i, pg))
+        return True
+
+    def truncate(self, slot: int, keep_rows: int):
+        """Unmap every page of ``slot`` wholly past rows ``[0, keep_rows)``
+        — the speculative rollback.  The page holding row ``keep_rows - 1``
+        stays mapped (it carries live rows; any stale tail rows inside it
+        are pos-masked and overwritten by subsequent decode writes), so the
+        gathered view of the kept span is untouched."""
+        row = self.table[slot]
+        mapped = row.tolist()
+        first = 0 if keep_rows <= 0 else (keep_rows - 1) // self.page_size + 1
+        for i in range(first, self.pages_per_slot):
+            if mapped[i] >= 0:
+                self._decref(mapped[i])
+                row[i] = -1
+        self._g_sharing.set(self.shared_pages_saved())
+
     def release(self, slot: int):
         """Unmap the slot: decref every page; zero-ref pages return to the
         free list (registered ones leave the prefix index with them)."""

@@ -89,6 +89,7 @@ from repro.models.params import unbox
 from repro.obs import Observability, StatsView
 from repro.serve.batching import Request
 from repro.serve.config import UNSET, ServeConfig, resolve_serve_config
+from repro.serve.speculative import accepted_prefix, plan_draft
 
 
 class SlotStream:
@@ -143,6 +144,13 @@ class SlotStream:
         self.pos = np.zeros(n_slots, np.int32)
         self.tok = np.zeros((E, n_slots, 1), np.int32)
         self.steps = 0
+        # requests whose draft verification finished them AT ADMISSION
+        # (full acceptance consumed the whole budget / hit the wall): they
+        # never see a decode step, so ``step()`` hands them back from here
+        self._admit_done: List[Tuple[Request, np.ndarray]] = []
+        # cascade hook: called as (request, n_accepted, n_draft) after
+        # every verify pass so the run can record per-tier accept rates
+        self.on_draft_verified = None
         # telemetry (DESIGN.md §11): counters + histograms on the stream's
         # obs registry, named under ``name`` (cascade tiers pass
         # ``slot_stream.tier{i}`` so one registry serves every tier).
@@ -161,6 +169,11 @@ class SlotStream:
         self._c_shared_tokens = sc.counter("shared_tokens")
         self._c_decode_tokens = sc.counter("decode_tokens")
         self._c_inflight_admitted = sc.counter("inflight_admitted")
+        # speculative verify (serve/speculative.py): passes run, draft
+        # tokens offered, draft tokens accepted
+        self._c_spec_drafts = sc.counter("spec.drafts")
+        self._c_spec_draft_tokens = sc.counter("spec.draft_tokens")
+        self._c_spec_accepted = sc.counter("spec.accepted_tokens")
         # ready-queue depth after every enqueue/admit — the streaming
         # backlog signal the online controller reads from the registry
         self._g_queue = sc.gauge("queue_depth")
@@ -195,6 +208,9 @@ class SlotStream:
             "decode_time": lambda: self._h_decode_dispatch.sum,
             "inflight_admitted": lambda: self._c_inflight_admitted.value,
             "inflight_wait": lambda: self._h_inflight_wait.sum,
+            "spec_drafts": lambda: self._c_spec_drafts.value,
+            "spec_draft_tokens": lambda: self._c_spec_draft_tokens.value,
+            "spec_accepted_tokens": lambda: self._c_spec_accepted.value,
         })
 
     # -- admission ---------------------------------------------------------
@@ -330,15 +346,90 @@ class SlotStream:
             self._c_chunk_tokens.add(m - shared)
             self._c_shared_tokens.add(shared)
             self._h_prefill_dispatch.record(self._clock() - t1)
+        # speculative verify (serve/speculative.py): a deferral arriving
+        # with the previous tier's agreeing generation scores every draft
+        # position in one chunked pass INSTEAD of the last-prompt-token
+        # decode feed — it runs where the chunk loop left off (consumed ==
+        # P-1 under chunked admission), and only on backends whose cache
+        # can roll rejected rows back (attention families)
+        plan = None
+        if r.draft is not None:
+            draft, r.draft = r.draft, None  # consumed at THIS admission
+            if self.chunked and getattr(
+                self.backend, "supports_draft_verify", False
+            ):
+                plan = plan_draft(
+                    r.tokens, draft, r.max_new_tokens, self.max_seq
+                )
+        verified = None
+        if plan is not None:
+            P = len(r.tokens)
+            T_use = len(plan.draft)
+            ext = getattr(self.backend, "extend_slot", None)
+            # paged: map private pages for the draft rows up front; a
+            # refusal (pool pressure) falls back to plain admission
+            if ext is None or ext(s, P + T_use):
+                if tr.enabled:
+                    tr.begin(r.rid, "verify_draft", draft_tokens=T_use)
+                choices = self.backend.verify_draft(
+                    plan.tokens, s, plan.start, self.max_chunk
+                )  # (E, T_use + 1) host choices
+                n_acc = accepted_prefix(choices, plan.draft)
+                rb = getattr(self.backend, "rollback_slot", None)
+                if rb is not None:
+                    # unmap pages wholly past the accepted span (dense
+                    # backends: the pos mask already hides rejected rows)
+                    rb(s, P + n_acc)
+                if tr.enabled:
+                    tr.end(r.rid, "verify_draft", accepted=n_acc)
+                self._c_spec_drafts.add(1)
+                self._c_spec_draft_tokens.add(T_use)
+                self._c_spec_accepted.add(n_acc)
+                if self.on_draft_verified is not None:
+                    self.on_draft_verified(r, n_acc, T_use)
+                verified = (plan, choices, n_acc)
         self.slot_req[s] = r
-        self.slot_consumed[s] = consumed + 1
-        self.slot_emitted[s] = []
-        self.pos[s] = consumed
-        self.tok[:, s, 0] = r.tokens[consumed]
+        if verified is not None:
+            plan, choices, n_acc = verified
+            E = self.backend.E
+            # accepted draft tokens are each member's own emission (their
+            # choices matched the draft there); position n_acc emits each
+            # member's OWN choice — together n_acc + 1 decode steps' worth
+            # of output from one pass
+            emitted = [
+                np.full((E,), d, np.int32) for d in plan.draft[:n_acc]
+            ]
+            emitted.append(choices[:, n_acc].astype(np.int32).copy())
+            self.slot_consumed[s] = len(r.tokens)
+            self.slot_emitted[s] = emitted
+            self.pos[s] = len(r.tokens) + n_acc
+            self.tok[:, s, 0] = choices[:, n_acc]
+        else:
+            self.slot_consumed[s] = consumed + 1
+            self.slot_emitted[s] = []
+            self.pos[s] = consumed
+            self.tok[:, s, 0] = r.tokens[consumed]
         self._c_admitted.add(1)
         if tr.enabled:
             tr.end(r.rid, "admit")
             tr.begin(r.rid, "decode", stream=self.name, slot=s)
+        if verified is not None:
+            # the verify pass may already satisfy the budget / hit the
+            # wall: complete NOW (the slot never decodes) and hand the
+            # result back through ``step()``'s _admit_done drain
+            full = len(self.slot_emitted[s]) >= r.max_new_tokens
+            wall = self.pos[s] >= self.max_seq - 1
+            if full or wall:
+                r.truncated = not full
+                gen = np.stack(self.slot_emitted[s], axis=1)
+                if tr.enabled:
+                    tr.end(
+                        r.rid, "decode",
+                        new_tokens=gen.shape[1], truncated=r.truncated,
+                    )
+                self._admit_done.append((r, gen))
+                self._release(s)
+                self._admit(s)
 
     def refill(self):
         """Admit queued requests into every free slot.  This is the
@@ -354,10 +445,15 @@ class SlotStream:
     @property
     def runnable(self) -> bool:
         """True when the stream can make device progress RIGHT NOW: a slot
-        is occupied or a ready request is queued.  In-flight sends do not
+        is occupied, a ready request is queued, or an admission-time
+        completion is waiting to be handed back.  In-flight sends do not
         count — a stream with only in-flight work has nothing to decode
         until a handle resolves (see ``active``)."""
-        return any(r is not None for r in self.slot_req) or bool(self.queue)
+        return (
+            any(r is not None for r in self.slot_req)
+            or bool(self.queue)
+            or bool(self._admit_done)
+        )
 
     @property
     def active(self) -> bool:
@@ -372,10 +468,13 @@ class SlotStream:
         (request, member generations (E, T)) that completed this step.
         Freed slots immediately admit from ``self.queue``."""
         self.refill()
+        # admission-time completions (fully-accepted drafts) exit first —
+        # they were finished by the verify pass and own no slot
+        completed = self._admit_done
+        self._admit_done = []
         n_active = sum(r is not None for r in self.slot_req)
         if n_active == 0:
-            return []
-        completed = []
+            return completed
         prepare = getattr(self.backend, "prepare_step", None)
         if prepare is not None:
             # paged pools: map every active slot's next write position
@@ -487,6 +586,25 @@ class _PagedSlots:
     def release_slot(self, slot):
         if self.paged:
             self.pool.release(slot)
+
+    def extend_slot(self, slot, n_rows):
+        """Cover rows ``[0, n_rows)`` with pages before a speculative
+        verify pass writes draft rows past the admission span (PRIVATE
+        pages only — see ``PagePool.extend``).  Dense backends need
+        nothing: their slot rows are dedicated.  Returns False when the
+        pool cannot cover the span (caller falls back to plain
+        admission)."""
+        if not self.paged:
+            return True
+        return self.pool.extend(slot, n_rows)
+
+    def rollback_slot(self, slot, keep_rows):
+        """Speculative rollback: unmap pages wholly past rows
+        ``[0, keep_rows)`` (``PagePool.truncate``).  Dense backends rely
+        on the pos mask — rejected rows are invisible and the next decode
+        overwrites its row before attending."""
+        if self.paged:
+            self.pool.truncate(slot, keep_rows)
 
     def prepare_step(self, pos, active):
         """Map each active slot's next write position; COW splits run the
@@ -632,9 +750,12 @@ class TierBackend(_PagedSlots):
             progs = tier_paged_programs(tier.cfg, float(tier.temperature))
             self._decode_paged = progs.decode_slots
             self._chunk_paged = progs.prefill_chunk
+            self._verify_paged = progs.verify_chunk
             self._copy_page = progs.copy_page
             self.caches = None
             self.supports_chunked_prefill = True
+            # paged families are attention families: always verifiable
+            self.supports_draft_verify = True
         else:
             # abclint: disable=ABC501(dense parity oracle: paged=False keeps the dense slot cache)
             values0, _ = unbox(api.init_cache(tier.cfg, n_slots, max_seq))
@@ -644,6 +765,9 @@ class TierBackend(_PagedSlots):
             )
             self.supports_chunked_prefill = (
                 getattr(tier, "_prefill_chunk", None) is not None
+            )
+            self.supports_draft_verify = (
+                getattr(tier, "_verify_chunk", None) is not None
             )
 
     def begin_slot(self, slot, tokens, *, share=True):
@@ -685,6 +809,34 @@ class TierBackend(_PagedSlots):
                 self.tier.values, self.caches, jnp.asarray(tokens),
                 jnp.int32(slot), jnp.int32(start),
             )
+
+    def verify_draft(self, tokens, slot, start, max_chunk):
+        """Score the verify chunk ``[prompt[-1], d_0..d_{T-1}]`` at
+        absolute positions ``[start, start + len(tokens))`` and return
+        every member's decode-equivalent choices, (E, len(tokens)) host
+        int32.  Runs in the SAME pow2 buckets as chunked prefill
+        (``prompt_chunks``), so no new program shapes trace per request;
+        choices stay on device across chunks and come back in ONE metered
+        fetch."""
+        key = self.slot_keys[slot]
+        outs = []
+        off = 0
+        for c in prompt_chunks(len(tokens), max_chunk):
+            chunk = jnp.asarray(tokens[off : off + c])
+            if self.paged:
+                t, self.pool_dev = self._verify_paged(
+                    self.tier.values, self.pool_dev, chunk,
+                    jnp.asarray(self.pool.table[slot]),
+                    jnp.int32(start + off), key,
+                )
+            else:
+                t, self.caches = self.tier._verify_chunk(
+                    self.tier.values, self.caches, chunk,
+                    jnp.int32(slot), jnp.int32(start + off), key,
+                )
+            outs.append(t)
+            off += c
+        return np.concatenate(host_fetch(tuple(outs)), axis=1)
 
     def reset_slot(self, slot):
         """Zero the slot's constant-state leaves across all members."""

@@ -1,0 +1,143 @@
+"""Cascade-as-drafter speculative decoding (DESIGN.md §13).
+
+A deferred request used to throw the fast tier's whole generation away:
+the big tier re-decoded every output token from scratch.  But the fast
+tier's members *agreed* on (a prefix of) that generation — agreement is
+the paper's signal of correctness, so those tokens are an unusually good
+draft.  This module turns them into one: the deferral payload carries the
+winning member's generation (``Request.draft``), and the receiving tier
+scores EVERY draft position in one chunked-prefill-shaped pass instead of
+one decode step per token.
+
+The contract, in terms the rest of the repo already enforces:
+
+* **Verify inputs.**  For a prompt of length P and draft d_0..d_{T-1},
+  the verify chunk is ``[prompt[P-1], d_0, .., d_{T-1}]`` at absolute
+  positions ``P-1 .. P-1+T``: feeding the token BEFORE each draft
+  position yields the model's own next-token choice at that position.
+  The pass runs through ``api.prefill_into_slot_logits`` (paged twin:
+  ``..._paged_logits``), which is the SAME chunked-prefill program family
+  the admission path compiles — ``core.cascade.prompt_chunks`` buckets,
+  no new traces per request — with the head projection bolted on.
+
+* **Acceptance rule.**  ``choices[e, j]`` is member e's sampled/greedy
+  token at draft position j.  The accepted length ``n_acc`` is the
+  longest prefix where EVERY member's choice matches the draft; the
+  emission at position ``n_acc`` is each member's own ``choices[:,
+  n_acc]`` — exactly the token that member's autoregressive decode would
+  have produced, because all of its context tokens matched the draft.
+  One pass therefore emits ``n_acc + 1`` tokens that are bitwise what
+  per-token decode would have emitted (greedy, or sampled: see below).
+
+* **Rollback.**  Rejected draft tokens wrote KV rows past ``P-1+n_acc``.
+  Dense slots need no action — the per-slot pos mask already hides rows
+  at/after the slot's position, and decode's scatter-then-attend
+  overwrites a row before ever attending to it.  Paged slots unmap the
+  pages wholly past the kept span (``PagePool.truncate``); verify wrote
+  only PRIVATE extension pages (``PagePool.extend`` never registers them
+  in the prefix index), so rollback is COW-safe and ``assert_conserved``
+  holds at every step.
+
+* **Sampling determinism (T>0).**  Decode samples token at position p
+  from ``categorical(fold_in(fold_in(slot_key, p), e))`` — a pure
+  function of (slot key, position, member), not of how many steps got
+  batched together.  ``verify_sampler`` reproduces that exact stream at
+  chunk positions ``start + j``, so sampled verification accepts against
+  the very tokens decode WOULD have sampled: speculative and plain
+  serving emit bitwise-identical generations at any temperature.
+
+Families: attention-cache only (``api.supports_draft_verify``).  A
+constant-state tier (SSM/RWKV/hybrid) cannot roll rejected tokens out of
+its recurrent state, so it falls back to plain admission — semantics
+unchanged, just no speedup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftPlan:
+    """One slot's verify pass, fully determined at admission time.
+
+    ``tokens`` (T_use+1,) — the verify chunk ``[prompt[-1], d_0..d_{T_use-1}]``;
+    ``draft`` (T_use,) — the draft positions being scored;
+    ``start`` — absolute position of ``tokens[0]`` (= P-1)."""
+
+    tokens: np.ndarray
+    draft: np.ndarray
+    start: int
+
+
+def plan_draft(
+    prompt_tokens: np.ndarray,
+    draft: np.ndarray,
+    max_new_tokens: int,
+    max_seq: int,
+) -> Optional[DraftPlan]:
+    """Clamp a draft to what the slot can legally verify, or None.
+
+    ``T_use <= max_new_tokens - 1``: the verify pass emits ``n_acc + 1``
+    tokens (accepted prefix plus the model's own token at the divergence
+    point), so a full-length draft would overshoot the budget by one.
+    ``T_use <= max_seq - P``: draft rows live at positions P..P+T_use-1
+    and the slot wall is max_seq.  Anything below one verifiable token
+    (e.g. ``max_new_tokens == 1`` — the first emission is never drafted)
+    is not worth a pass."""
+    P = int(len(prompt_tokens))
+    T_use = min(int(len(draft)), max_new_tokens - 1, max_seq - P)
+    if T_use < 1:
+        return None
+    # abclint: disable=ABC203(the draft arrived host-side on the deferral hop)
+    draft = np.asarray(draft[:T_use], np.int32)
+    tokens = np.concatenate(
+        # abclint: disable=ABC203(r.tokens is the host prompt array)
+        [np.asarray(prompt_tokens[-1:], np.int32), draft]
+    )
+    return DraftPlan(tokens=tokens, draft=draft, start=P - 1)
+
+
+def accepted_prefix(choices: np.ndarray, draft: np.ndarray) -> int:
+    """Longest prefix where every member's choice equals the draft.
+
+    choices (E, >=T), draft (T,) -> n_acc in [0, T].  Min over members:
+    a position is accepted only if ALL member trajectories would have
+    produced the draft token there, which is what keeps each member's
+    emitted sequence identical to its own autoregressive decode."""
+    T = int(draft.shape[0])
+    ok = (choices[:, :T] == draft[None, :]).all(axis=0)
+    # abclint: disable=ABC202(choices is the host array the backend already fetched)
+    return T if ok.all() else int(np.argmin(ok))
+
+
+def verify_sampler(temperature: float):
+    """Per-position member choices for the verify chunk, reproducing the
+    decode-time ``_slot_sampler`` stream exactly (cascade_server.py):
+    token(e, p) = categorical(fold_in(fold_in(slot_key, p), e), l/T).
+
+    Returns ``sample(logits (E, C, V), slot_key (2,), positions (C,)) ->
+    (E, C) int32``.  Greedy (T<=0) is a plain argmax."""
+
+    def sample(logits, slot_key, positions):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        E = logits.shape[0]
+
+        def one(p, ls):  # (), (E, V)
+            kp = jax.random.fold_in(slot_key, p)
+            return jax.vmap(
+                lambda e, l: jax.random.categorical(
+                    jax.random.fold_in(kp, e), l / temperature
+                )
+            )(jnp.arange(E), ls)
+
+        return jax.vmap(one, in_axes=(0, 1), out_axes=1)(
+            positions, logits
+        ).astype(jnp.int32)
+
+    return sample

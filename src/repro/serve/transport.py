@@ -14,6 +14,11 @@ what actually crosses the boundary — the compacted deferral payload (plus
 its i32 routing index map), never the full batch — and every hop records
 ``Hop(src, dst, n_examples, payload_bytes, latency)`` at send time, so the
 metered hop list is identical whether a hop is drained eagerly or lazily.
+Continuous-mode deferral payloads are ``{"tokens": (S,) i32 prompt}``
+plus, under ``ServeConfig.speculative``, ``"draft": (T,) i32`` — the
+sending tier's agreeing generation, verified by the receiving tier in one
+chunked pass (serve/speculative.py); draft bytes are metered on the hop
+like any other payload leaf.
 
 Backends:
 

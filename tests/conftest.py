@@ -1,9 +1,43 @@
 import os
 import sys
 
+import pytest
+
 # src layout without install (+ repo root for the benchmarks package)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # real single CPU device; only launch/dryrun.py forces 512 host devices.
+
+
+@pytest.fixture
+def trace_validation(request, monkeypatch):
+    """Schema-validate every trace the test emits, even tests that never
+    ask for tracing: Observability bundles built without an explicit
+    tracer get a recording ``Tracer`` instead of the NullTracer, and at
+    teardown each recorded stream must pass ``validate_trace`` (span
+    nesting, per-track monotone timestamps, B/E pairing).  Terminal
+    completes are not required — tests legitimately stop servers with
+    requests in flight.  Opt a module in with
+    ``pytestmark = pytest.mark.usefixtures("trace_validation")``."""
+    from repro.obs import Observability
+    from repro.obs.trace import Tracer, validate_trace
+
+    recorded = []
+    orig = Observability.__init__
+
+    def patched(self, registry=None, tracer=None, clock=None):
+        if tracer is None:
+            tracer = Tracer()
+            recorded.append(tracer)
+        orig(self, registry, tracer, clock)
+
+    monkeypatch.setattr(Observability, "__init__", patched)
+    yield
+    # tests that abort serving mid-request (e.g. an admission that raises)
+    # leave spans legitimately open — they opt out per-test
+    if request.node.get_closest_marker("no_trace_validation"):
+        return
+    for tr in recorded:
+        validate_trace(tr.export(), require_terminal=False)

@@ -97,6 +97,35 @@ def test_abc103_clean_static_dtype_predicate(tmp_path):
     assert findings == []
 
 
+def test_abc104_per_token_decode_over_draft(tmp_path):
+    findings = lint_fixture(tmp_path, "src/repro/serve/sx.py", """
+        def verify(backend, plan, slot):
+            for j, tok in enumerate(plan.draft):
+                logits, _ = backend.decode_step(tok, slot, plan.start + j)
+    """)
+    assert rules_of(findings) == ["ABC104"]
+
+
+def test_abc104_clean_single_verify_pass_and_out_of_scope(tmp_path):
+    findings = lint_fixture(tmp_path, "src/repro/serve/sx.py", """
+        def verify(backend, plan, slot, max_chunk):
+            choices = backend.verify_draft(
+                plan.tokens, slot, plan.start, max_chunk
+            )
+            for tok in plan.draft:
+                record(tok)
+            return choices
+    """)
+    assert findings == []
+    findings = lint_fixture(tmp_path, "src/repro/models/mx.py", """
+        def reference(api, params, cache, draft, cfg):
+            for j, tok in enumerate(draft):
+                logits, cache = api.decode_step(params, tok, cache, j, cfg)
+            return cache
+    """)
+    assert findings == []
+
+
 # ---------------------------------------------------------------------------
 # pass 2 — host-sync leaks (scope: serve/ + core/cascade.py)
 # ---------------------------------------------------------------------------

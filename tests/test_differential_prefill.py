@@ -1,0 +1,240 @@
+"""Differential fuzz of chunked prefill (seeded numpy — runs in tier 1,
+no hypothesis needed): across all six families, random (prompt length ×
+chunk split × slot) trials assert that
+
+* any chunk split of ``prefill_into_slot`` produces bitwise-identical
+  decode logits (the split is an implementation detail, never semantics);
+* the chunked path matches the one-shot batch ``prefill`` — bitwise for
+  every family except hybrid (whose one-shot recurrent scan re-associates
+  bf16 state differently than the chunk-carried path; argmax + tolerance
+  there);
+* the paged chunk path is bitwise the dense chunk path;
+* the speculative verify surface (``prefill_into_slot_logits``) is split-
+  invariant, scores the decode head bitwise, and fully accepts the
+  model's own greedy continuation — the api-level seed of the serving
+  parity tests in tests/test_speculative.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.cascade import prompt_chunks
+from repro.models import api
+from repro.models.params import unbox
+from repro.serve.paging import PagePool
+
+_BASE = dict(n_layers=2, d_model=64, d_ff=128, vocab_size=64, remat=False)
+CONFIGS = {
+    "dense": ModelConfig(
+        name="df-dense", family="dense", n_heads=4, n_kv_heads=2, **_BASE
+    ),
+    "moe": ModelConfig(
+        name="df-moe", family="moe", n_heads=4, n_kv_heads=2, n_experts=4,
+        top_k=2, capacity_factor=4.0, **_BASE
+    ),
+    "moe_interleaved": ModelConfig(
+        name="df-moe-il", family="moe", n_heads=4, n_kv_heads=2, n_experts=4,
+        top_k=2, moe_every=2, capacity_factor=4.0, **_BASE
+    ),
+    "ssm_mamba2": ModelConfig(
+        name="df-mamba", family="ssm_mamba2", ssm_state=16, ssm_head_dim=32,
+        **_BASE
+    ),
+    "ssm_rwkv6": ModelConfig(
+        name="df-rwkv", family="ssm_rwkv6", ssm_head_dim=32,
+        rwkv_lora_rank=8, **_BASE
+    ),
+    "hybrid": ModelConfig(
+        name="df-hybrid", family="hybrid", n_heads=4, n_kv_heads=2,
+        ssm_state=16, ssm_head_dim=32, attn_every=2, **_BASE
+    ),
+}
+FAMILIES = list(CONFIGS)
+MAX_SEQ = 48
+N_SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {
+        f: unbox(api.init_params(cfg, jax.random.PRNGKey(i)))[0]
+        for i, (f, cfg) in enumerate(CONFIGS.items())
+    }
+
+
+def _random_split(rng, m):
+    """A random composition of m (chunk lengths summing to m)."""
+    split = []
+    left = m
+    while left:
+        c = int(rng.integers(1, left + 1))
+        split.append(c)
+        left -= c
+    return split
+
+
+def _chunked_decode_logits(cfg, params, prompt, split, slot):
+    """Chunk prompt[:-1] by ``split`` into ``slot``, then decode the last
+    prompt token — the serving admission path, run at the api level."""
+    cache, _ = unbox(api.init_cache(cfg, N_SLOTS, MAX_SEQ))
+    off = 0
+    for c in split:
+        cache = api.prefill_into_slot(
+            params, jnp.asarray(prompt[off : off + c]), cache,
+            jnp.int32(slot), jnp.int32(off), cfg,
+        )
+        off += c
+    P = len(prompt)
+    tok = np.zeros((N_SLOTS, 1), np.int32)
+    tok[slot, 0] = prompt[-1]
+    # per-slot positions: idle slots sit at 0, the active slot at P-1
+    pos = np.zeros(N_SLOTS, np.int32)
+    pos[slot] = P - 1
+    logits, _ = api.decode_step(
+        params, jnp.asarray(tok), cache, jnp.asarray(pos), cfg
+    )
+    return np.asarray(logits[slot])
+
+
+def _splits(rng, m):
+    """Canonical pow2 bucket split plus two random compositions."""
+    out = [prompt_chunks(m, 256)]
+    out.append(_random_split(rng, m))
+    out.append(_random_split(rng, m))
+    return out
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_chunk_split_is_bitwise_invariant_and_matches_one_shot(models, family):
+    cfg = CONFIGS[family]
+    params = models[family]
+    rng = np.random.default_rng(FAMILIES.index(family))
+    for _ in range(2):
+        P = int(rng.integers(3, 34))
+        slot = int(rng.integers(0, N_SLOTS))
+        prompt = rng.integers(1, cfg.vocab_size, P).astype(np.int32)
+        ref = None
+        for split in _splits(rng, P - 1):
+            logits = _chunked_decode_logits(cfg, params, prompt, split, slot)
+            if ref is None:
+                ref = logits
+            else:
+                np.testing.assert_array_equal(
+                    ref, logits, err_msg=f"{family} split={split}"
+                )
+        # the chunked admission path matches the one-shot prefill: bitwise
+        # for every family except hybrid, whose one-shot path folds the
+        # whole sequence through a single recurrent scan while the chunked
+        # path re-associates the bf16 state at chunk boundaries — there the
+        # contract is argmax-identical within bf16 tolerance
+        one_shot = np.asarray(
+            api.prefill(params, {"tokens": jnp.asarray(prompt[None])}, cfg)[0]
+        )[0]
+        if family == "hybrid":
+            np.testing.assert_allclose(ref, one_shot, atol=5e-3, rtol=0)
+            assert int(ref.argmax()) == int(one_shot.argmax())
+        else:
+            np.testing.assert_array_equal(ref, one_shot)
+
+
+@pytest.mark.parametrize("family", [f for f in FAMILIES
+                                    if api.supports_paging(CONFIGS[f])])
+def test_paged_chunk_path_is_bitwise_dense(models, family):
+    cfg = CONFIGS[family]
+    params = models[family]
+    rng = np.random.default_rng(1000 + FAMILIES.index(family))
+    for _ in range(2):
+        P = int(rng.integers(3, 34))
+        prompt = rng.integers(1, cfg.vocab_size, P).astype(np.int32)
+        dense = _chunked_decode_logits(
+            cfg, params, prompt, _random_split(rng, P - 1), 0
+        )
+        pool = PagePool(16, 4, n_slots=1, max_seq=MAX_SEQ)
+        pool.admit(0, prompt, share=False)
+        pool_dev, _ = unbox(api.init_paged_pool(cfg, pool.n_pages, 4))
+        off = 0
+        for c in _random_split(rng, P - 1):
+            pool_dev = api.prefill_into_slot_paged(
+                params, jnp.asarray(prompt[off : off + c]), pool_dev,
+                jnp.asarray(pool.table[0]), jnp.int32(off), cfg,
+            )
+            off += c
+        logits, _ = api.decode_step_paged(
+            params, jnp.asarray(prompt[-1:][None]), pool_dev,
+            jnp.asarray([P - 1], np.int32), jnp.asarray(pool.table), cfg,
+        )
+        np.testing.assert_array_equal(dense, np.asarray(logits[0]))
+
+
+@pytest.mark.parametrize("family", [f for f in FAMILIES
+                                    if api.supports_draft_verify(CONFIGS[f])])
+def test_verify_surface_split_invariant_and_scores_decode_head(models, family):
+    """The verify pass is just chunked prefill + the head: its per-position
+    logits must be split-invariant AND its last position must be bitwise
+    the decode step's logits for the same token at the same position."""
+    cfg = CONFIGS[family]
+    params = models[family]
+    rng = np.random.default_rng(2000 + FAMILIES.index(family))
+    for _ in range(2):
+        P = int(rng.integers(3, 26))
+        prompt = rng.integers(1, cfg.vocab_size, P).astype(np.int32)
+        ref = None
+        for split in _splits(rng, P):
+            cache, _ = unbox(api.init_cache(cfg, N_SLOTS, MAX_SEQ))
+            outs, off = [], 0
+            for c in split:
+                logits, cache = api.prefill_into_slot_logits(
+                    params, jnp.asarray(prompt[off : off + c]), cache,
+                    jnp.int32(0), jnp.int32(off), cfg,
+                )
+                outs.append(np.asarray(logits))
+                off += c
+            all_pos = np.concatenate(outs, axis=0)  # (P, V)
+            if ref is None:
+                ref = all_pos
+            else:
+                np.testing.assert_array_equal(ref, all_pos)
+        decode = _chunked_decode_logits(
+            cfg, params, prompt, prompt_chunks(P - 1, 256), 0
+        )
+        np.testing.assert_array_equal(ref[-1], decode)
+
+
+def test_verify_fully_accepts_own_greedy_continuation(models):
+    """api-level seed of the serving acceptance tests: draft = the model's
+    own greedy continuation -> every verify choice matches the draft."""
+    cfg = CONFIGS["dense"]
+    params = models["dense"]
+    rng = np.random.default_rng(77)
+    prompt = rng.integers(1, cfg.vocab_size, 9).astype(np.int32)
+    P, T = len(prompt), 5
+    # sequential greedy continuation through the decode program
+    cache, _ = unbox(api.init_cache(cfg, 1, MAX_SEQ))
+    for off in range(P - 1):
+        cache = api.prefill_into_slot(
+            params, jnp.asarray(prompt[off : off + 1]), cache,
+            jnp.int32(0), jnp.int32(off), cfg,
+        )
+    tok, cont = int(prompt[-1]), []
+    for t in range(T):
+        logits, cache = api.decode_step(
+            params, jnp.asarray([[tok]], np.int32), cache,
+            jnp.asarray([P - 1 + t], np.int32), cfg,
+        )
+        tok = int(np.asarray(logits[0]).argmax())
+        cont.append(tok)
+    # verify chunk [prompt[-1], cont[:-1]] scores positions P-1..P+T-2
+    cache, _ = unbox(api.init_cache(cfg, 1, MAX_SEQ))
+    for off in range(P - 1):
+        cache = api.prefill_into_slot(
+            params, jnp.asarray(prompt[off : off + 1]), cache,
+            jnp.int32(0), jnp.int32(off), cfg,
+        )
+    chunk = np.asarray([int(prompt[-1])] + cont[:-1], np.int32)
+    logits, cache = api.prefill_into_slot_logits(
+        params, jnp.asarray(chunk), cache, jnp.int32(0), jnp.int32(P - 1), cfg
+    )
+    choices = np.asarray(logits).argmax(-1)
+    np.testing.assert_array_equal(choices, cont)

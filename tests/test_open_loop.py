@@ -29,6 +29,10 @@ from repro.serve import (
     poisson,
 )
 
+# every Observability these tests build gets a recording tracer; its
+# stream is schema-validated at teardown (tests/conftest.py)
+pytestmark = pytest.mark.usefixtures("trace_validation")
+
 SMALL = ModelConfig(
     name="tiny-s", family="dense", n_layers=2, d_model=64, d_ff=128,
     vocab_size=64, n_heads=4, n_kv_heads=2, remat=False,

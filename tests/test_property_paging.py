@@ -1,0 +1,230 @@
+"""Hypothesis stateful property suite for ``serve/paging.py``.
+
+A ``RuleBasedStateMachine`` drives a small ``PagePool`` (chosen so
+exhaustion is common) through random admit / prefix-share / COW-prepare /
+extend / truncate / release sequences, mirrored step-for-step by a
+dict-based oracle allocator that models only the SEMANTICS — which slot
+spans are covered, which prefixes are shared, which pages are live — and
+none of the mechanics (free-list order, page ids, crc keys).  After every
+rule the pool must agree with the oracle on every observable (occupancy,
+sharing savings, per-slot coverage, the return value of the operation
+itself), ``assert_conserved`` must hold, and exhaustion must be reported
+via return values (None/False), never by raising.
+
+Hypothesis is an optional dev dependency (requirements-dev.txt): this
+module import-skips without it and runs for real in the CI lane that sets
+``REPRO_REQUIRE_HYPOTHESIS`` (see tests/test_hypothesis_gate.py).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine, invariant, rule,
+)
+
+from repro.serve.paging import PagePool  # noqa: E402
+
+N_PAGES = 8          # 7 allocatable: 3 slots x 4 pages/slot oversubscribes
+PAGE_SIZE = 4
+N_SLOTS = 3
+MAX_SEQ = 16
+PAGES_PER_SLOT = MAX_SEQ // PAGE_SIZE
+CAPACITY = N_PAGES - 1
+
+# tiny alphabet + canned stems -> prefix collisions are common, so the
+# sharing rules actually fire instead of always missing the index
+tokens_st = st.lists(
+    st.integers(min_value=1, max_value=3), min_size=1, max_size=MAX_SEQ
+)
+slot_st = st.integers(min_value=0, max_value=N_SLOTS - 1)
+
+
+class _Oracle:
+    """Dict/counter model of the pool: page ids are synthetic ints, state
+    is {pid: refcount}, {pid: registered key}, {key: pid}, and per-slot
+    entry lists (table index -> pid)."""
+
+    def __init__(self):
+        self.ref = {}
+        self.key_of = {}
+        self.index = {}
+        self.slots = {s: [None] * PAGES_PER_SLOT for s in range(N_SLOTS)}
+        self._next = 0
+
+    @property
+    def live(self):
+        return len(self.ref)
+
+    @property
+    def free(self):
+        return CAPACITY - self.live
+
+    def saved(self):
+        return sum(r - 1 for r in self.ref.values() if r > 1)
+
+    def _new(self):
+        pid = self._next
+        self._next += 1
+        self.ref[pid] = 1
+        return pid
+
+    def _decref(self, pid):
+        assert self.ref[pid] > 0
+        self.ref[pid] -= 1
+        if self.ref[pid] == 0:
+            key = self.key_of.pop(pid, None)
+            if key is not None:
+                del self.index[key]
+            del self.ref[pid]
+
+    def admit(self, slot, toks, share):
+        """Predicted return value of PagePool.admit; mutates on success."""
+        m = len(toks) - 1
+        n_need = m // PAGE_SIZE + 1
+        n_full = m // PAGE_SIZE
+        keys = [
+            tuple(toks[: (i + 1) * PAGE_SIZE]) for i in range(n_full)
+        ] if share else []
+        shared = 0
+        for key in keys:
+            if key not in self.index:
+                break
+            shared += 1
+        if self.free < n_need - shared:
+            return None  # rollback restores prior refcounts exactly
+        row = self.slots[slot]
+        for i in range(shared):
+            pid = self.index[keys[i]]
+            self.ref[pid] += 1
+            row[i] = pid
+        for i in range(shared, n_need):
+            row[i] = self._new()
+        if share:
+            for i in range(shared, n_full):
+                if keys[i] not in self.index:
+                    self.index[keys[i]] = row[i]
+                    self.key_of[row[i]] = keys[i]
+        return shared * PAGE_SIZE
+
+    def extend(self, slot, n_rows):
+        row = self.slots[slot]
+        n_need = (n_rows - 1) // PAGE_SIZE + 1
+        missing = [i for i in range(n_need) if row[i] is None]
+        if self.free < len(missing):
+            return False
+        for i in missing:
+            row[i] = self._new()  # private: never registered
+        return True
+
+    def truncate(self, slot, keep_rows):
+        first = 0 if keep_rows <= 0 else (keep_rows - 1) // PAGE_SIZE + 1
+        row = self.slots[slot]
+        for i in range(first, PAGES_PER_SLOT):
+            if row[i] is not None:
+                self._decref(row[i])
+                row[i] = None
+
+    def release(self, slot):
+        for i, pid in enumerate(self.slots[slot]):
+            if pid is not None:
+                self._decref(pid)
+        self.slots[slot] = [None] * PAGES_PER_SLOT
+
+    def prepare(self, slot, pos):
+        """Predicted (ok, n_copies) of PagePool.prepare; mutates to match."""
+        i = pos // PAGE_SIZE
+        pid = self.slots[slot][i]
+        if pid is None:
+            if self.free < 1:
+                return False, 0
+            self.slots[slot][i] = self._new()
+            return True, 0
+        if self.ref[pid] > 1:
+            if self.free < 1:
+                return False, 0
+            self.ref[pid] -= 1  # still shared by the remaining owners
+            self.slots[slot][i] = self._new()
+            return True, 1
+        key = self.key_of.pop(pid, None)  # solo-owned: unregister pre-write
+        if key is not None:
+            del self.index[key]
+        return True, 0
+
+
+class PagingMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.pool = PagePool(
+            N_PAGES, PAGE_SIZE, n_slots=N_SLOTS, max_seq=MAX_SEQ
+        )
+        self.oracle = _Oracle()
+
+    # -- rules -------------------------------------------------------------
+    @rule(slot=slot_st, toks=tokens_st, share=st.booleans())
+    def admit(self, slot, toks, share):
+        if any(p is not None for p in self.oracle.slots[slot]):
+            return  # occupied; PagePool.admit asserts on that
+        got = self.pool.admit(slot, toks, share=share)
+        want = self.oracle.admit(slot, toks, share)
+        assert got == want, (got, want)
+
+    @rule(slot=slot_st, n_rows=st.integers(min_value=1, max_value=MAX_SEQ))
+    def extend(self, slot, n_rows):
+        got = self.pool.extend(slot, n_rows)
+        want = self.oracle.extend(slot, n_rows)
+        assert got == want, (got, want)
+
+    @rule(slot=slot_st, keep=st.integers(min_value=0, max_value=MAX_SEQ))
+    def truncate(self, slot, keep):
+        self.pool.truncate(slot, keep)
+        self.oracle.truncate(slot, keep)
+
+    @rule(slot=slot_st, pos=st.integers(min_value=0, max_value=MAX_SEQ - 1))
+    def prepare(self, slot, pos):
+        ok, copies = self.pool.prepare(slot, pos)
+        want_ok, want_copies = self.oracle.prepare(slot, pos)
+        assert (ok, len(copies)) == (want_ok, want_copies)
+        for src, dst in copies:
+            assert src != dst and 0 <= dst < N_PAGES - 1
+
+    @rule(slot=slot_st)
+    def release(self, slot):
+        self.pool.release(slot)
+        self.oracle.release(slot)
+
+    # -- invariants (checked after every rule) -----------------------------
+    @invariant()
+    def conserved(self):
+        self.pool.assert_conserved()
+
+    @invariant()
+    def occupancy_matches_oracle(self):
+        assert self.pool.pages_in_use == self.oracle.live
+        assert self.pool.free_pages == self.oracle.free
+        assert self.pool.shared_pages_saved() == self.oracle.saved()
+
+    @invariant()
+    def coverage_matches_oracle(self):
+        for s in range(N_SLOTS):
+            got = {i for i in range(PAGES_PER_SLOT) if self.pool.table[s, i] >= 0}
+            want = {
+                i for i, p in enumerate(self.oracle.slots[s]) if p is not None
+            }
+            assert got == want, (s, got, want)
+
+    @invariant()
+    def sharing_structure_matches_oracle(self):
+        # registered-page count and per-page refcounts agree (page ids are
+        # incomparable across pool and oracle, so compare the multisets)
+        assert len(self.pool._page_key) == len(self.oracle.key_of)
+        got = sorted(int(r) for r in self.pool.refcount if r > 0)
+        want = sorted(self.oracle.ref.values())
+        assert got == want, (got, want)
+
+
+PagingMachine.TestCase.settings = settings(
+    max_examples=120, stateful_step_count=60, deadline=None
+)
+TestPagingProperties = PagingMachine.TestCase

@@ -35,6 +35,10 @@ from repro.serve import (
     TierBackend,
 )
 
+# every Observability these tests build gets a recording tracer; its
+# stream is schema-validated at teardown (tests/conftest.py)
+pytestmark = pytest.mark.usefixtures("trace_validation")
+
 _BASE = dict(n_layers=2, d_model=64, d_ff=128, vocab_size=64, remat=False)
 CONFIGS = {
     "dense": ModelConfig(
@@ -313,6 +317,7 @@ def test_paged_pool_wall_forces_completion(stacks):
     pool.assert_conserved()
 
 
+@pytest.mark.no_trace_validation  # aborts admission: queue_wait stays open
 def test_paged_pool_too_small_for_prompt_raises(stacks):
     """A prompt needing more pages than the whole pool can never admit —
     with every slot free that is a configuration error, not a retry."""

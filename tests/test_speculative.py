@@ -1,0 +1,310 @@
+"""Cascade-as-drafter speculative decoding (serve/speculative.py, DESIGN.md
+§13): plan/acceptance unit behavior, pool extend/truncate bookkeeping, and
+the headline contract — speculative serving emits BITWISE what plain
+serving emits (greedy and sampled, paged and dense, with and without a
+transport link) while the receiving tier spends fewer decode steps."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import ensemble as ens
+from repro.core.cascade import TierSpec
+from repro.models import api
+from repro.models.params import unbox
+from repro.serve import CascadeServer, CascadeTier, Request, ServeConfig
+from repro.serve.engine import trace_count
+from repro.serve.paging import PagePool
+from repro.serve.speculative import accepted_prefix, plan_draft
+
+_BASE = dict(n_layers=2, d_model=64, d_ff=128, vocab_size=64, remat=False)
+CONFIGS = {
+    "dense": ModelConfig(
+        name="spec-dense", family="dense", n_heads=4, n_kv_heads=2, **_BASE
+    ),
+    "moe": ModelConfig(
+        name="spec-moe", family="moe", n_heads=4, n_kv_heads=2, n_experts=4,
+        top_k=2, capacity_factor=4.0, **_BASE
+    ),
+    "moe_interleaved": ModelConfig(
+        name="spec-moe-il", family="moe", n_heads=4, n_kv_heads=2,
+        n_experts=4, top_k=2, moe_every=2, capacity_factor=4.0, **_BASE
+    ),
+}
+ATTENTION = list(CONFIGS)
+
+
+@pytest.fixture(scope="module")
+def stacks():
+    return {
+        f: unbox(ens.init_ensemble(cfg, 3, jax.random.PRNGKey(i)))[0]
+        for i, (f, cfg) in enumerate(CONFIGS.items())
+    }
+
+
+def _requests(seed, n, *, lo=4, hi=14, max_new=(2, 6)):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            tokens=rng.integers(1, 64, size=int(rng.integers(lo, hi))).astype(
+                np.int32
+            ),
+            max_new_tokens=int(rng.integers(*max_new)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _agreeing_server(stacks, family, temperature=0.0):
+    """tier0 = [m0, m0, m2]: the m0 pair agrees, so the plurality draft is
+    m0's own generation; theta=0.8 makes a 2/3 vote defer.  tier1 = [m0]:
+    identical params, so at T=0 the draft is exactly what tier 1 would
+    decode — deterministic full acceptance on every deferral."""
+    cfg = CONFIGS[family]
+    vals = stacks[family]
+    stacked = jax.tree.map(lambda v: jnp.stack([v[0], v[0], v[2]]), vals)
+    t0 = CascadeTier(
+        cfg, stacked, TierSpec("t0", "vote_preds", 0.8, k=3),
+        temperature=temperature,
+    )
+    t1 = CascadeTier(
+        cfg, jax.tree.map(lambda v: v[0:1], vals),
+        TierSpec("t1", "vote_preds", 0.0, k=1), temperature=temperature,
+    )
+    return CascadeServer([t0, t1])
+
+
+def _by_prompt(done):
+    return {
+        tuple(r.tokens): (r.tier, tuple(r.output), r.truncated) for r in done
+    }
+
+
+def _run_pair(server, reqs, *, paged=None, max_seq=64, n_slots=2):
+    """(plain, speculative) serve_continuous runs over fresh copies of the
+    same requests; returns (plain done, spec done, tier-1 stats pair)."""
+    mk = lambda s: ServeConfig(
+        n_slots=n_slots, max_seq=max_seq, paged=paged, speculative=s
+    )
+    base = server.serve_continuous([copy.deepcopy(r) for r in reqs], mk(False))
+    base_stats = [dict(s) for s in server.last_stream_stats]
+    spec = server.serve_continuous([copy.deepcopy(r) for r in reqs], mk(True))
+    spec_stats = [dict(s) for s in server.last_stream_stats]
+    return base, spec, base_stats, spec_stats
+
+
+# ---------------------------------------------------------------------------
+# unit behavior: plan, acceptance rule, pool extend/truncate
+# ---------------------------------------------------------------------------
+
+
+def test_plan_draft_clamps_and_rejects():
+    prompt = np.arange(1, 9, dtype=np.int32)  # P = 8
+    draft = np.array([9, 10, 11, 12], np.int32)
+    p = plan_draft(prompt, draft, max_new_tokens=6, max_seq=64)
+    assert p.start == 7
+    np.testing.assert_array_equal(p.draft, draft)
+    np.testing.assert_array_equal(p.tokens, [8, 9, 10, 11, 12])
+    # budget clamp: the verify pass emits n_acc + 1, so T_use <= max_new - 1
+    p = plan_draft(prompt, draft, max_new_tokens=3, max_seq=64)
+    assert len(p.draft) == 2 and len(p.tokens) == 3
+    # wall clamp: draft rows must fit below max_seq
+    p = plan_draft(prompt, draft, max_new_tokens=6, max_seq=10)
+    assert len(p.draft) == 2
+    # nothing verifiable: max_new_tokens=1 never drafts
+    assert plan_draft(prompt, draft, max_new_tokens=1, max_seq=64) is None
+    assert plan_draft(prompt, np.zeros(0, np.int32), 6, 64) is None
+
+
+def test_accepted_prefix_is_min_over_members():
+    draft = np.array([5, 6, 7], np.int32)
+    full = np.tile(np.array([5, 6, 7, 9], np.int32), (2, 1))
+    assert accepted_prefix(full, draft) == 3
+    partial = full.copy()
+    partial[1, 1] = 0  # member 1 diverges at position 1
+    assert accepted_prefix(partial, draft) == 1
+    none = full.copy()
+    none[0, 0] = 0
+    assert accepted_prefix(none, draft) == 0
+
+
+def test_pool_extend_and_truncate_conserve_pages():
+    pool = PagePool(n_pages=9, page_size=4, n_slots=2, max_seq=32)
+    pool.admit(0, np.arange(6, dtype=np.int32), share=True)  # rows 0..4 -> 2pg
+    assert pool.extend(0, 13)  # rows 0..12 -> 4 pages total
+    assert sum(p >= 0 for p in pool.table[0].tolist()) == 4
+    pool.assert_conserved()
+    # rollback keeps the page holding the last live row
+    pool.truncate(0, keep_rows=6)  # rows 0..5 -> pages 0..1 stay
+    assert sum(p >= 0 for p in pool.table[0].tolist()) == 2
+    pool.assert_conserved()
+    # extend refusal rolls back ONLY its own allocations
+    pool.admit(1, np.arange(21, dtype=np.int32), share=True)  # 5 pages
+    before = [p for p in pool.table[1].tolist() if p >= 0]
+    assert not pool.extend(1, 32)  # needs 8, pool has 9-2-5-1(sink)=1 free
+    assert [p for p in pool.table[1].tolist() if p >= 0] == before
+    pool.assert_conserved()
+    pool.release(0)
+    pool.release(1)
+    pool.assert_conserved()
+    assert pool.free_pages == pool.n_pages - 1  # overflow sink stays out
+
+
+def test_extension_pages_never_register_for_sharing():
+    """COW-safety is structural: pages mapped by ``extend`` must never
+    enter the prefix index, so no sharer can observe provisional draft
+    rows."""
+    pool = PagePool(n_pages=16, page_size=4, n_slots=3, max_seq=32)
+    prompt = np.arange(9, dtype=np.int32)  # m=8 -> 2 full pages registered
+    pool.admit(0, prompt, share=True)
+    registered = set(pool._page_key)
+    pool.extend(0, 16)  # draft rows through page index 3
+    assert set(pool._page_key) == registered, "extend registered a page"
+    # a sharer admitting the same prompt shares ONLY the admission prefix
+    shared = pool.admit(1, prompt, share=True)
+    assert shared == 8
+    pool.assert_conserved()
+
+
+# ---------------------------------------------------------------------------
+# the serving contract: bitwise parity + fewer big-tier decode steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ATTENTION)
+@pytest.mark.parametrize("paged", [False, True])
+def test_speculative_bitwise_and_fewer_decodes(stacks, family, paged):
+    if paged and not api.supports_paging(CONFIGS[family]):
+        pytest.skip("family has no paged backend")
+    server = _agreeing_server(stacks, family)
+    reqs = _requests(seed=31, n=8)
+    base, spec, bs, ss = _run_pair(server, reqs, paged=paged)
+    assert _by_prompt(base) == _by_prompt(spec)
+    assert bs[1]["spec_drafts"] == 0
+    deferred = sum(r.tier == 1 for r in base)
+    assert deferred >= 2, "fixture must defer for the test to mean anything"
+    # identical params + greedy -> every draft token accepted
+    assert ss[1]["spec_accepted_tokens"] == ss[1]["spec_draft_tokens"] > 0
+    assert ss[1]["decode_tokens"] < bs[1]["decode_tokens"]
+
+
+@pytest.mark.parametrize("temperature", [0.7])
+def test_speculative_bitwise_at_sampled_temperature(stacks, temperature):
+    """T>0: the verify sampler reproduces the per-slot decode rng stream,
+    so speculative serving still emits bitwise-identical generations even
+    when acceptance is partial (tier-1's sampled stream diverges from the
+    tier-0 draft wherever it likes — parity must survive every n_acc)."""
+    server = _agreeing_server(stacks, "dense", temperature=temperature)
+    reqs = _requests(seed=33, n=8)
+    base, spec, _, ss = _run_pair(server, reqs, paged=True)
+    assert _by_prompt(base) == _by_prompt(spec)
+    assert ss[1]["spec_drafts"] > 0
+
+
+def test_partial_acceptance_still_bitwise(stacks):
+    """tier1 = a DIFFERENT member than the draft's author: acceptance is
+    whatever prefix happens to match (often zero), and the divergence-point
+    fallback must splice into ordinary decode without shifting a single
+    token."""
+    cfg = CONFIGS["dense"]
+    vals = stacks["dense"]
+    stacked = jax.tree.map(lambda v: jnp.stack([v[0], v[0], v[2]]), vals)
+    server = CascadeServer([
+        CascadeTier(cfg, stacked, TierSpec("t0", "vote_preds", 0.8, k=3)),
+        CascadeTier(cfg, jax.tree.map(lambda v: v[1:2], vals),
+                    TierSpec("t1", "vote_preds", 0.0, k=1)),
+    ])
+    reqs = _requests(seed=35, n=8)
+    base, spec, _, ss = _run_pair(server, reqs, paged=True)
+    assert _by_prompt(base) == _by_prompt(spec)
+    assert ss[1]["spec_drafts"] > 0
+    assert ss[1]["spec_accepted_tokens"] < ss[1]["spec_draft_tokens"]
+
+
+def test_paged_equals_dense_speculative(stacks):
+    """The paged pool (extend/rollback included) is bitwise the dense slot
+    cache under speculative serving."""
+    server = _agreeing_server(stacks, "dense")
+    reqs = _requests(seed=37, n=8)
+    mk = lambda paged: ServeConfig(
+        n_slots=2, max_seq=64, paged=paged, speculative=True
+    )
+    dense = server.serve_continuous([copy.deepcopy(r) for r in reqs], mk(False))
+    paged = server.serve_continuous([copy.deepcopy(r) for r in reqs], mk(True))
+    assert _by_prompt(dense) == _by_prompt(paged)
+
+
+def test_constant_state_families_fall_back_to_plain_admission(stacks):
+    """SSM/RWKV/hybrid tiers cannot roll rejected draft tokens out of
+    their recurrent state: a draft arriving at such a tier is dropped at
+    admission (plain chunked prefill runs instead) and the outputs are
+    unchanged."""
+    cfg = ModelConfig(
+        name="spec-mamba", family="ssm_mamba2", ssm_state=16,
+        ssm_head_dim=32, **_BASE
+    )
+    vals, _ = unbox(ens.init_ensemble(cfg, 3, jax.random.PRNGKey(9)))
+    stacked = jax.tree.map(lambda v: jnp.stack([v[0], v[0], v[2]]), vals)
+    server = CascadeServer([
+        CascadeTier(cfg, stacked, TierSpec("t0", "vote_preds", 0.8, k=3)),
+        CascadeTier(cfg, jax.tree.map(lambda v: v[0:1], vals),
+                    TierSpec("t1", "vote_preds", 0.0, k=1)),
+    ])
+    reqs = _requests(seed=39, n=6)
+    base, spec, _, ss = _run_pair(server, reqs)
+    assert _by_prompt(base) == _by_prompt(spec)
+    assert sum(r.tier == 1 for r in base) >= 1
+    assert ss[1]["spec_drafts"] == 0  # no verify pass ever ran
+
+
+def test_speculative_trace_counts_flat_after_warmup(stacks):
+    """Compile-once: a second speculative run (same geometry) must not
+    trace a single new program — verify chunks land in the same pow2
+    buckets chunked prefill already warmed."""
+    server = _agreeing_server(stacks, "dense")
+    reqs = _requests(seed=41, n=8)
+    cfgv = ServeConfig(n_slots=2, max_seq=64, paged=True, speculative=True)
+    server.serve_continuous([copy.deepcopy(r) for r in reqs], cfgv)
+    n0 = trace_count()
+    server.serve_continuous([copy.deepcopy(r) for r in reqs], cfgv)
+    assert trace_count() == n0
+
+
+# ---------------------------------------------------------------------------
+# transport: the draft rides the metered hop, delivery order irrelevant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("link", ["sim", "serial", "async"])
+def test_draft_rides_metered_hop_and_order_is_irrelevant(stacks, link):
+    from repro.serve import edge_cloud
+
+    cfg = CONFIGS["dense"]
+    vals = stacks["dense"]
+    stacked = jax.tree.map(lambda v: jnp.stack([v[0], v[0], v[2]]), vals)
+
+    def build(speculative):
+        placement = edge_cloud(delay=0.01, link=link)
+        server = CascadeServer([
+            CascadeTier(cfg, stacked, TierSpec("t0", "vote_preds", 0.8, k=3)),
+            CascadeTier(cfg, jax.tree.map(lambda v: v[0:1], vals),
+                        TierSpec("t1", "vote_preds", 0.0, k=1)),
+        ], placement=placement)
+        reqs = _requests(seed=43, n=6)
+        done = server.serve_continuous(
+            reqs, ServeConfig(n_slots=2, max_seq=64, speculative=speculative)
+        )
+        return done, placement.link(0), server
+
+    base, link_plain, _ = build(False)
+    spec, link_spec, server = build(True)
+    assert _by_prompt(base) == _by_prompt(spec)
+    assert len(link_spec.hops) == len(link_plain.hops) > 0
+    for hp, hs in zip(link_plain.hops, link_spec.hops):
+        # same deferral, same prompt — the spec hop carries the draft too
+        assert hs.payload_bytes > hp.payload_bytes
+    st = server.last_stream_stats[1]
+    assert st["spec_accepted_tokens"] == st["spec_draft_tokens"] > 0

@@ -24,6 +24,14 @@ ABC103  Python branching (``if``/``while``/ternary/``assert``) on an
         host sync + retrace fork at worst.  Static dtype predicates
         (``jnp.issubdtype``/``jnp.isdtype``) are exempt: they run on
         types, not values.
+
+ABC104  (scope: ``src/repro/serve/``) a ``for`` loop over a draft-token
+        iterable whose body dispatches ``decode_step`` — re-verifying a
+        speculative draft one decode dispatch per token, which is exactly
+        the per-token cost the verify pass exists to amortize.  Draft
+        positions must be scored in one chunked-prefill-shaped pass
+        (``TierBackend.verify_draft`` -> ``api.prefill_into_slot_logits``,
+        serve/speculative.py).
 """
 from __future__ import annotations
 
@@ -54,7 +62,24 @@ RULES = {
               "a cache miss)",
     "ABC103": "Python branch on a jnp/jax.numpy expression (tracer "
               "boolification / hidden host sync)",
+    "ABC104": "per-token decode loop over draft tokens in serve/ (score "
+              "the whole draft in one verify pass)",
 }
+
+_DECODE_NAMES = ("decode_step", "decode_step_paged")
+_ABC104_SCOPE = "src/repro/serve/"
+
+
+def _mentions_draft(expr: ast.AST) -> bool:
+    """True if the loop's iterable references a draft: any Name or
+    Attribute component containing 'draft' (covers ``draft``,
+    ``plan.draft``, ``enumerate(draft)``, ``range(len(r.draft))``)."""
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Name) and "draft" in sub.id:
+            return True
+        if isinstance(sub, ast.Attribute) and "draft" in sub.attr:
+            return True
+    return False
 
 
 def _in_cached_factory(stack: List[ast.AST]) -> bool:
@@ -103,6 +128,24 @@ def check_file(ctx: FileContext) -> List[Finding]:
                             "(module level) so the jit cache can key on it",
                         )
                     )
+        if (
+            isinstance(node, ast.For)
+            and ctx.path.startswith(_ABC104_SCOPE)
+            and _mentions_draft(node.iter)
+            and any(
+                astutil.contains_call_to(stmt, _DECODE_NAMES)
+                for stmt in node.body
+            )
+        ):
+            findings.append(
+                ctx.finding(
+                    "ABC104", node,
+                    "decode_step dispatched per draft token — score every "
+                    "draft position in ONE chunked verify pass "
+                    "(TierBackend.verify_draft / "
+                    "api.prefill_into_slot_logits) instead",
+                )
+            )
         test = None
         if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
             test = node.test
